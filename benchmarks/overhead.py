@@ -1,0 +1,57 @@
+"""Paper Table I + §IV-E overhead rows: scheduling 10 ms, monitor <= 1% CPU.
+
+Also micro-benchmarks the *wall-clock* cost of one NSA decision and one
+partition-plan computation on this host (name, us_per_call).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.cluster import make_paper_cluster
+from repro.core.monitor import ResourceMonitor
+from repro.core.partitioner import ModelPartitioner
+from repro.core.pipeline import DistributedInference
+from repro.core.scheduler import TaskRequirements, TaskScheduler
+from repro.models.graph import mobilenetv2_graph
+
+
+def _time_us(fn, n=200):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    g = mobilenetv2_graph()
+    rows = []
+
+    c = make_paper_cluster()
+    rep = DistributedInference(c, ModelPartitioner(g)).run(50)
+    rows.append(dict(config="simulated-overheads",
+                     sched_overhead_ms=rep.scheduling_overhead_ms,
+                     paper_sched_ms=10.0,
+                     monitor_cpu_pct=round(rep.monitor_overhead_pct, 4),
+                     paper_monitor_pct="<=1.0"))
+
+    c = make_paper_cluster()
+    mon = ResourceMonitor(c)
+    sched = TaskScheduler()
+    stats = mon.online_stats()
+    rows.append(dict(config="nsa-decision",
+                     us_per_call=round(_time_us(
+                         lambda: sched.select_node(stats, TaskRequirements())), 1)))
+    part = ModelPartitioner(g)
+    rows.append(dict(config="partition-plan-3way",
+                     us_per_call=round(_time_us(lambda: part.plan(3)), 1)))
+    rows.append(dict(config="monitor-poll",
+                     us_per_call=round(_time_us(
+                         lambda: mon.poll(force=True)), 1)))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

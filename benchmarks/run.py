@@ -1,0 +1,58 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints one CSV block per benchmark: ``name,key=value,...`` rows, plus a
+summary line. Exit code reflects reproduction checks (partition sizes must
+match the paper exactly; overheads must be in range).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (ablation_weights, adaptability, kernel_bench, overhead,
+                        partitioning, scalability, table1_comparative,
+                        table2_profiles)
+
+MODULES = [
+    ("table1_comparative", table1_comparative),
+    ("table2_profiles", table2_profiles),
+    ("partitioning", partitioning),
+    ("scalability", scalability),
+    ("adaptability", adaptability),
+    ("overhead", overhead),
+    ("ablation_weights", ablation_weights),
+    ("kernel_bench", kernel_bench),
+]
+
+
+def main() -> None:
+    ok = True
+    for name, mod in MODULES:
+        t0 = time.perf_counter()
+        rows = mod.run()
+        dt = time.perf_counter() - t0
+        print(f"\n# {name} ({dt:.2f}s)")
+        for row in rows:
+            cfg = row.pop("config", "")
+            print(",".join([f"{name}/{cfg}"] +
+                           [f"{k}={v}" for k, v in row.items()]))
+        # reproduction gates
+        if name == "partitioning":
+            for row in rows:
+                if "match" in row and not row["match"]:
+                    ok = False
+                    print(f"!! partition sizes diverge from paper: {row}")
+        if name == "overhead":
+            oh = rows[0]
+            if not (oh["sched_overhead_ms"] == 10.0
+                    and oh["monitor_cpu_pct"] <= 1.0):
+                ok = False
+                print("!! overhead out of paper range")
+    print("\nBENCHMARKS", "OK" if ok else "FAILED")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

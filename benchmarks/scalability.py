@@ -1,0 +1,41 @@
+"""Paper §IV-E: scaling 1 -> 4 nodes (linear to 3 nodes in the paper).
+
+Task-parallel AMP4EC (the scheduler's primary mode) over homogeneous
+high-profile nodes; reports throughput and scaling efficiency.
+"""
+
+from __future__ import annotations
+
+from repro.core.cluster import EdgeCluster
+from repro.core.partitioner import ModelPartitioner
+from repro.core.pipeline import run_task_parallel
+from repro.models.graph import mobilenetv2_graph
+
+N_REQ = 120
+
+
+def run():
+    g = mobilenetv2_graph()
+    rows = []
+    base_tput = None
+    for n_nodes in (1, 2, 3, 4):
+        c = EdgeCluster()
+        for i in range(n_nodes):
+            c.add_node(f"edge-{i}", "high")
+        rep = run_task_parallel(c, ModelPartitioner(g), N_REQ,
+                                name=f"nodes-{n_nodes}")
+        tput = rep.throughput_rps
+        if base_tput is None:
+            base_tput = tput
+        rows.append(dict(
+            config=f"scale-{n_nodes}node", throughput_rps=round(tput, 3),
+            latency_ms=round(rep.steady_latency_ms, 2),
+            speedup=round(tput / base_tput, 3),
+            efficiency_pct=round(100 * tput / base_tput / n_nodes, 1),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

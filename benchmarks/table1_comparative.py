@@ -1,0 +1,74 @@
+"""Paper Table I: monolithic vs AMP4EC vs AMP4EC+Cache (+ beyond-paper rows).
+
+Semantics notes (EXPERIMENTS.md §Repro):
+- "Inference Latency" is steady-state (inverse-throughput) latency — the
+  paper's own monolithic row satisfies latency ~= 1/throughput, and the
+  +Cache row equals the High-profile stage time, so this is the comparable
+  metric.
+- The paper's +415% throughput at equal aggregate CPU (2.0 cores both sides)
+  is not reachable by any work-conserving simulator; our numbers are the
+  model-consistent ones.
+"""
+
+from __future__ import annotations
+
+from repro.core.cluster import EdgeCluster, make_paper_cluster
+from repro.core.partitioner import ModelPartitioner
+from repro.core.pipeline import (DistributedInference, run_monolithic,
+                                 run_task_parallel)
+from repro.models.graph import mobilenetv2_graph
+
+PAPER = {
+    "monolithic": dict(latency_ms=1082.53, throughput_rps=0.96),
+    "amp4ec": dict(latency_ms=605.32, throughput_rps=5.01),
+    "amp4ec+cache": dict(latency_ms=234.56, throughput_rps=5.07),
+}
+
+N_REQ = 100
+
+
+def run():
+    g = mobilenetv2_graph()
+    rows = []
+
+    c = EdgeCluster()
+    c.add_node("mono", "monolithic")
+    mono = run_monolithic(c, ModelPartitioner(g), N_REQ)
+    rows.append(mono.row())
+
+    c = make_paper_cluster()
+    amp = DistributedInference(c, ModelPartitioner(g))
+    rows.append(amp.run(N_REQ, name="amp4ec").row())
+
+    c = make_paper_cluster()
+    ampc = DistributedInference(c, ModelPartitioner(g), use_cache=True)
+    rows.append(ampc.run(N_REQ, name="amp4ec+cache", repeat_rate=0.8).row())
+
+    # --- beyond-paper variants (recorded separately in §Perf) ---
+    c = make_paper_cluster()
+    nodes = [n.node_id for n in c.online_nodes()]
+    opt = DistributedInference(c, ModelPartitioner(g), weights=[1.0, 0.6, 0.4],
+                               method="optimal", num_partitions=3,
+                               assignment=nodes)
+    rows.append(opt.run(N_REQ, name="amp4ec-optimal-weighted").row())
+
+    c = make_paper_cluster()
+    rows.append(run_task_parallel(c, ModelPartitioner(g), N_REQ).row())
+
+    for r in rows:
+        paper = PAPER.get(r["config"])
+        if paper:
+            r["paper_latency_ms"] = paper["latency_ms"]
+            r["paper_throughput_rps"] = paper["throughput_rps"]
+    base = rows[0]
+    for r in rows[1:]:
+        r["latency_reduction_pct"] = round(
+            100 * (1 - r["latency_ms"] / base["latency_ms"]), 1)
+        r["throughput_gain_pct"] = round(
+            100 * (r["throughput_rps"] / base["throughput_rps"] - 1), 1)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

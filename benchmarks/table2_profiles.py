@@ -1,0 +1,32 @@
+"""Paper Table II: resource profiles vs average inference time.
+
+One balanced (3-way-average) MobileNetV2 partition executed on a node of
+each profile; paper values are 234.56 / 389.27 / 583.91 ms.
+"""
+
+from __future__ import annotations
+
+from repro.core.cost_model import PROFILES, execution_ms
+from repro.models.graph import mobilenetv2_graph
+
+PAPER = {"high": 234.56, "medium": 389.27, "low": 583.91}
+
+
+def run():
+    g = mobilenetv2_graph()
+    stage_cost = g.total_cost / 3.0
+    rows = []
+    for name in ("high", "medium", "low"):
+        prof = PROFILES[name]
+        ms = execution_ms(stage_cost, prof)
+        rows.append(dict(
+            config=f"profile-{name}", cpu=prof.cpu, mem_mb=prof.mem_mb,
+            avg_inference_ms=round(ms, 2), paper_ms=PAPER[name],
+            rel_err_pct=round(100 * abs(ms - PAPER[name]) / PAPER[name], 2),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

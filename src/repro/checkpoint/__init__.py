@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointer import latest_step, restore_checkpoint, save_checkpoint

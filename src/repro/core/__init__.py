@@ -1,0 +1,28 @@
+"""AMP4EC core: the paper's contribution as a composable library.
+
+Components (paper §III):
+  A. ResourceMonitor       — repro.core.monitor
+  B. ModelPartitioner      — repro.core.partitioner
+  C. TaskScheduler (NSA)   — repro.core.scheduler
+  D. ModelDeployer (+cache)— repro.core.deployer / repro.core.cache
+
+plus the simulated heterogeneous cluster (repro.core.cluster), the
+calibrated cost/timing model (repro.core.cost_model) and the end-to-end
+pipeline runtime (repro.core.pipeline).
+"""
+
+from repro.core.cache import ResultCache
+from repro.core.cluster import EdgeCluster, EdgeNode, make_paper_cluster
+from repro.core.cost_model import NodeProfile, PROFILES
+from repro.core.deployer import ModelDeployer
+from repro.core.monitor import NodeStats, ResourceMonitor
+from repro.core.partitioner import ModelPartitioner, Partition, PartitionPlan
+from repro.core.pipeline import DistributedInference, RunReport, run_monolithic
+from repro.core.scheduler import TaskRequirements, TaskScheduler
+
+__all__ = [
+    "ResultCache", "EdgeCluster", "EdgeNode", "make_paper_cluster",
+    "NodeProfile", "PROFILES", "ModelDeployer", "NodeStats", "ResourceMonitor",
+    "ModelPartitioner", "Partition", "PartitionPlan", "DistributedInference",
+    "RunReport", "run_monolithic", "TaskRequirements", "TaskScheduler",
+]

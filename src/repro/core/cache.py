@@ -1,0 +1,57 @@
+"""Result/pattern cache (the AMP4EC+Cache configuration, paper §IV-B).
+
+LRU keyed by (model, partition, input digest). A hit skips both the
+partition's compute and the boundary transfer — the mechanism behind the
+paper's "network bandwidth reduced to zero" row in Table I.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+
+def digest(x) -> str:
+    arr = np.asarray(x)
+    return hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
+
+
+class ResultCache:
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._store: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.bytes_saved = 0.0
+
+    def key(self, model: str, part_index: int, input_digest: str) -> Tuple:
+        return (model, part_index, input_digest)
+
+    def get(self, key: Tuple) -> Optional[Any]:
+        if key in self._store:
+            self._store.move_to_end(key)
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Tuple, value: Any, transfer_bytes: float = 0.0) -> None:
+        self._store[key] = value
+        self._store.move_to_end(key)
+        if len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+    def credit_saved(self, num_bytes: float) -> None:
+        self.bytes_saved += num_bytes
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def stats(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses, hit_rate=self.hit_rate,
+                    entries=len(self._store), bytes_saved=self.bytes_saved)

@@ -1,0 +1,137 @@
+"""Simulated heterogeneous edge cluster (the Docker testbed, without Docker).
+
+Deterministic discrete-event simulation: a shared ``SimClock`` plus
+``EdgeNode`` objects whose capacity profiles mirror the paper's cgroup
+limits. Supports the dynamic events the paper motivates in §I: node join
+("new device added") and node offline ("device offline"), with the
+framework redistributing work in response.
+
+Real numerics (JAX forwards) are run by the pipeline; *time* is charged via
+``core.cost_model`` so results are bit-reproducible on any host.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.cost_model import NodeProfile, PROFILES, execution_ms, transfer_ms
+
+
+class SimClock:
+    def __init__(self):
+        self.now_ms: float = 0.0
+
+    def advance(self, ms: float) -> None:
+        assert ms >= 0
+        self.now_ms += ms
+
+
+@dataclass
+class TaskRecord:
+    task_id: int
+    node_id: str
+    start_ms: float
+    end_ms: float
+    cost: float
+
+    @property
+    def exec_ms(self) -> float:
+        return self.end_ms - self.start_ms
+
+
+class EdgeNode:
+    """One simulated edge device."""
+
+    def __init__(self, node_id: str, profile: NodeProfile):
+        self.node_id = node_id
+        self.profile = profile
+        self.online = True
+        self.busy_until_ms = 0.0
+        self.task_count = 0            # tasks currently assigned / completed window
+        self.active_tasks = 0
+        self.mem_used_bytes = 0.0      # deployed partitions
+        self.history: List[TaskRecord] = []
+        self.net_rx_bytes = 0.0
+        self.net_tx_bytes = 0.0
+        self.cpu_busy_ms = 0.0         # integral of busy time (for CPU%)
+
+    # --- telemetry (consumed by the Resource Monitor) ---
+
+    @property
+    def current_load(self) -> float:
+        """Active tasks normalized by a nominal per-node concurrency of 2."""
+        return min(1.0, self.active_tasks / 2.0)
+
+    def mem_pct(self) -> float:
+        return 100.0 * self.mem_used_bytes / self.profile.mem_bytes
+
+    def cpu_pct(self, window_ms: float) -> float:
+        if window_ms <= 0:
+            return 0.0
+        return min(100.0, 100.0 * self.cpu_busy_ms / window_ms)
+
+    # --- execution ---
+
+    def execute(self, clock: SimClock, task_id: int, cost: float,
+                working_set: float = 0.0, start_ms: Optional[float] = None) -> TaskRecord:
+        """Run a task; returns its record. Queues behind this node's backlog."""
+        assert self.online, f"{self.node_id} is offline"
+        start = max(start_ms if start_ms is not None else clock.now_ms,
+                    self.busy_until_ms)
+        dur = execution_ms(cost, self.profile, working_set)
+        rec = TaskRecord(task_id, self.node_id, start, start + dur, cost)
+        self.busy_until_ms = rec.end_ms
+        self.cpu_busy_ms += dur
+        self.history.append(rec)
+        self.task_count += 1
+        return rec
+
+    def receive(self, num_bytes: float) -> float:
+        self.net_rx_bytes += num_bytes
+        return transfer_ms(num_bytes, self.profile)
+
+    def send(self, num_bytes: float) -> float:
+        self.net_tx_bytes += num_bytes
+        return transfer_ms(num_bytes, self.profile)
+
+
+class EdgeCluster:
+    """Node registry + dynamic membership events."""
+
+    def __init__(self):
+        self.clock = SimClock()
+        self.nodes: Dict[str, EdgeNode] = {}
+        self._task_ids = itertools.count()
+        self.events: List[str] = []
+
+    # --- membership -------------------------------------------------------
+
+    def add_node(self, node_id: str, profile: NodeProfile | str) -> EdgeNode:
+        if isinstance(profile, str):
+            profile = PROFILES[profile]
+        node = EdgeNode(node_id, profile)
+        self.nodes[node_id] = node
+        self.events.append(f"[{self.clock.now_ms:9.1f}ms] join   {node_id} "
+                           f"(cpu={profile.cpu}, mem={profile.mem_mb}MB)")
+        return node
+
+    def remove_node(self, node_id: str) -> None:
+        node = self.nodes[node_id]
+        node.online = False
+        self.events.append(f"[{self.clock.now_ms:9.1f}ms] offline {node_id}")
+
+    def online_nodes(self) -> List[EdgeNode]:
+        return [n for n in self.nodes.values() if n.online]
+
+    def next_task_id(self) -> int:
+        return next(self._task_ids)
+
+
+def make_paper_cluster(profiles=("high", "medium", "low")) -> EdgeCluster:
+    """The paper's 3-node heterogeneous testbed (§IV-B)."""
+    c = EdgeCluster()
+    for i, p in enumerate(profiles):
+        c.add_node(f"edge-{i}-{p}", p)
+    return c

@@ -1,0 +1,119 @@
+"""AMP4EC cost model (paper §III-B2, Eq. 1/2/9) + edge-node timing model.
+
+The *layer* costs live on the ``ModelGraph`` (see models/graph.py). This
+module turns partition costs into simulated execution times on heterogeneous
+edge nodes, and provides the TPU-adapted per-layer cost used for mesh stage
+assignment.
+
+Calibration: Table II of the paper gives per-profile inference times that are
+exactly proportional to 1/CPU (234.56 * 1.0 ≈ 389.27 * 0.6 ≈ 583.91 * 0.4 ≈
+233.6 cpu·ms). We anchor the simulator's base throughput so that one
+balanced 3-way MobileNetV2 partition on a 1.0-CPU node takes 234.56 ms —
+reproducing Table II by construction and leaving Table I as a genuine
+prediction of the model.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+from repro.models.graph import LayerSpec, ModelGraph
+
+# --- edge-node hardware model ----------------------------------------------
+
+#: cost-units processed per millisecond per 1.0 CPU. Calibrated (see module
+#: docstring): the average 3-way MobileNetV2 partition (44,049,952 / 3 =
+#: 14,683,317 cost units) takes 234.56 ms on a 1.0-CPU node (Table II),
+#: net of the fixed per-inference overhead.
+BASE_THROUGHPUT = 14_683_317.33 / (234.56 - 2.0)  # ~63,138 cost-units/ms/cpu
+
+#: memory-pressure exponent: working sets above the node's memory limit slow
+#: execution superlinearly (swap/thrash) — the paper's own observation that
+#: "reduced memory had a more significant impact ... than CPU".
+MEM_PRESSURE_ALPHA = 1.5
+
+#: fixed per-inference overhead (interpreter, dispatch), ms
+FIXED_OVERHEAD_MS = 2.0
+
+
+@dataclass(frozen=True)
+class NodeProfile:
+    cpu: float           # CPU fraction (1.0 == one core)
+    mem_mb: float
+    net_latency_ms: float = 1.0
+    net_bw_mbps: float = 800.0    # bridge-network bandwidth
+
+    @property
+    def mem_bytes(self) -> float:
+        return self.mem_mb * 1024 * 1024
+
+
+# paper resource profiles (§IV-A)
+PROFILES = {
+    "high": NodeProfile(cpu=1.0, mem_mb=1024),
+    "medium": NodeProfile(cpu=0.6, mem_mb=512),
+    "low": NodeProfile(cpu=0.4, mem_mb=512),
+    "monolithic": NodeProfile(cpu=2.0, mem_mb=2048),
+}
+
+
+def execution_ms(cost: float, profile: NodeProfile, working_set_bytes: float = 0.0,
+                 *, threads: float = 1.0) -> float:
+    """Simulated execution time of ``cost`` units on a node.
+
+    ``threads``: effective parallelism of the runtime on this node (the
+    paper's PyTorch inference is effectively single-threaded per request, so
+    callers use min(cpu, 1.0) unless modeling batch-parallel runtimes).
+    """
+    eff_cpu = min(profile.cpu, threads)
+    t = cost / (BASE_THROUGHPUT * eff_cpu) + FIXED_OVERHEAD_MS
+    if working_set_bytes > profile.mem_bytes:
+        t *= (working_set_bytes / profile.mem_bytes) ** MEM_PRESSURE_ALPHA
+    return t
+
+
+def transfer_ms(num_bytes: float, profile: NodeProfile) -> float:
+    """Network transfer time for a partition boundary activation."""
+    if num_bytes <= 0:
+        return 0.0
+    return profile.net_latency_ms + num_bytes * 8.0 / (profile.net_bw_mbps * 1e3)
+
+
+def partition_cost(graph: ModelGraph, lo: int, hi: int) -> float:
+    return sum(l.cost for l in graph.layers[lo:hi])
+
+
+def partition_params_bytes(graph: ModelGraph, lo: int, hi: int, dtype_bytes: int = 4) -> int:
+    return dtype_bytes * sum(l.params for l in graph.layers[lo:hi])
+
+
+def boundary_bytes(graph: ModelGraph, cut: int) -> int:
+    """Activation bytes crossing the boundary *before* layer ``cut``."""
+    if cut <= 0 or cut >= len(graph.layers):
+        return 0
+    return graph.layers[cut - 1].out_bytes + graph.layers[cut - 1].state_bytes
+
+
+def working_set_bytes(graph: ModelGraph, lo: int, hi: int, batch: int = 1) -> float:
+    """Params + peak activation for a partition (memory-pressure input)."""
+    params = partition_params_bytes(graph, lo, hi)
+    peak_act = max((l.out_bytes for l in graph.layers[lo:hi]), default=0)
+    return params + batch * peak_act
+
+
+# --- TPU adaptation ----------------------------------------------------------
+
+# TPU v5e hardware constants (per chip), used across roofline + stage costing.
+TPU_PEAK_FLOPS = 197e12          # bf16
+TPU_HBM_BW = 819e9               # bytes/s
+TPU_ICI_BW = 50e9                # bytes/s/link
+
+
+def tpu_stage_ms(flops: float, chips: int) -> float:
+    return flops / (TPU_PEAK_FLOPS * chips) * 1e3
+
+
+def tpu_boundary_ms(num_bytes: float) -> float:
+    return num_bytes / TPU_ICI_BW * 1e3

@@ -1,0 +1,119 @@
+"""Model Deployer (paper §III-D).
+
+Places partitions on nodes (via the Task Scheduler), charges the one-time
+model-transfer cost, applies the optimization level (the paper's
+TorchScript/quantization step becomes a dtype policy here), maintains
+deployment records, supports undeploy, and — the paper's §I motivation —
+redeploys partitions when a node goes offline or rebalances when one joins.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.cluster import EdgeCluster
+from repro.core.monitor import ResourceMonitor
+from repro.core.partitioner import Partition, PartitionPlan
+from repro.core.scheduler import TaskRequirements, TaskScheduler
+
+#: optimization levels: compute speedup factor, bytes shrink factor
+OPT_LEVELS = {
+    "none": (1.0, 1.0),
+    "script": (1.15, 1.0),      # TorchScript-style graph optimization
+    "bf16": (1.25, 0.5),
+    "int8": (1.6, 0.25),
+}
+
+
+@dataclass
+class Deployment:
+    partition: Partition
+    node_id: str
+    opt_level: str
+    transfer_ms: float
+    active: bool = True
+
+
+class ModelDeployer:
+    def __init__(self, cluster: EdgeCluster, monitor: ResourceMonitor,
+                 scheduler: TaskScheduler, opt_level: str = "none"):
+        assert opt_level in OPT_LEVELS
+        self.cluster = cluster
+        self.monitor = monitor
+        self.scheduler = scheduler
+        self.opt_level = opt_level
+        self.deployments: Dict[int, Deployment] = {}
+        self.redeploy_events: List[str] = []
+
+    @property
+    def speedup(self) -> float:
+        return OPT_LEVELS[self.opt_level][0]
+
+    def _mem_req_mb(self, part: Partition) -> float:
+        shrink = OPT_LEVELS[self.opt_level][1]
+        return part.params_bytes * shrink / (1024 * 1024) + 32.0  # + runtime
+
+    def deploy_plan(self, plan: PartitionPlan,
+                    assignment: Optional[List[str]] = None) -> Dict[int, str]:
+        """Deploy every partition; returns {partition_index: node_id}.
+
+        Without an explicit assignment, each partition is placed by the NSA
+        (heaviest partitions first, so capable nodes take costly stages).
+        """
+        placed: Dict[int, str] = {}
+        order = sorted(plan.partitions, key=lambda p: -p.cost)
+        for part in order:
+            if assignment is not None:
+                node_id = assignment[part.index]
+            else:
+                stats = self.monitor.online_stats()
+                req = TaskRequirements(cpu=0.1, mem_mb=self._mem_req_mb(part))
+                node_id = self.scheduler.select_node(stats, req)
+                if node_id is None:
+                    raise RuntimeError(
+                        f"no eligible node for partition {part.index} "
+                        f"(mem req {self._mem_req_mb(part):.0f} MB)")
+            node = self.cluster.nodes[node_id]
+            shrink = OPT_LEVELS[self.opt_level][1]
+            t_ms = node.receive(part.params_bytes * shrink)
+            node.mem_used_bytes += part.params_bytes * shrink
+            self.deployments[part.index] = Deployment(part, node_id, self.opt_level, t_ms)
+            placed[part.index] = node_id
+        return placed
+
+    def undeploy(self, part_index: int) -> None:
+        d = self.deployments.get(part_index)
+        if d and d.active:
+            node = self.cluster.nodes[d.node_id]
+            shrink = OPT_LEVELS[self.opt_level][1]
+            node.mem_used_bytes = max(0.0, node.mem_used_bytes
+                                      - d.partition.params_bytes * shrink)
+            d.active = False
+
+    def assignment(self) -> Dict[int, str]:
+        return {i: d.node_id for i, d in self.deployments.items() if d.active}
+
+    # --- failure recovery / elasticity --------------------------------------
+
+    def handle_node_offline(self, node_id: str) -> List[int]:
+        """Redeploy partitions that lived on a now-offline node."""
+        moved = []
+        for i, d in list(self.deployments.items()):
+            if d.active and d.node_id == node_id:
+                self.undeploy(i)
+                stats = self.monitor.online_stats()
+                req = TaskRequirements(cpu=0.1, mem_mb=self._mem_req_mb(d.partition))
+                new_node = self.scheduler.select_node(stats, req)
+                if new_node is None:
+                    raise RuntimeError("no capacity to redeploy partition %d" % i)
+                node = self.cluster.nodes[new_node]
+                shrink = OPT_LEVELS[self.opt_level][1]
+                t = node.receive(d.partition.params_bytes * shrink)
+                node.mem_used_bytes += d.partition.params_bytes * shrink
+                self.deployments[i] = Deployment(d.partition, new_node,
+                                                 self.opt_level, t)
+                moved.append(i)
+                self.redeploy_events.append(
+                    f"partition {i}: {node_id} -> {new_node}")
+        return moved

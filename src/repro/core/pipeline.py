@@ -1,0 +1,332 @@
+"""Distributed partitioned-inference pipeline + metrics (paper §IV).
+
+Executes AMP4EC end-to-end on the simulated cluster: requests flow through
+partition stages placed on heterogeneous nodes; stage timing follows the
+calibrated cost model; numerics (when an executor is supplied) are real JAX
+computation and are verified partitioned == monolithic at deploy time.
+
+Timing semantics (discrete-event):
+  stage_start(r, s) = max(activation_arrival(r, s), node_free(s))
+so consecutive requests pipeline across stages, and per-request latency =
+last stage end - submit time. The monolithic baseline is the same machinery
+with one partition on one node (single-threaded runtime, as in the paper's
+PyTorch container).
+"""
+
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cache import ResultCache, digest
+from repro.core.cluster import EdgeCluster
+from repro.core.cost_model import transfer_ms
+from repro.core.deployer import ModelDeployer
+from repro.core.monitor import ResourceMonitor
+from repro.core.partitioner import ModelPartitioner, PartitionPlan
+from repro.core.scheduler import SCHEDULING_OVERHEAD_MS, TaskScheduler
+
+
+@dataclass
+class RequestMetrics:
+    request_id: int
+    submit_ms: float
+    finish_ms: float
+    comm_ms: float
+    cache_hits: int
+    stages: int
+    service_ms: float = 0.0     # pure execution + comm time, no queueing
+
+    @property
+    def latency_ms(self) -> float:
+        return self.finish_ms - self.submit_ms
+
+
+@dataclass
+class RunReport:
+    name: str
+    requests: List[RequestMetrics]
+    network_bytes: float
+    scheduling_overhead_ms: float
+    monitor_overhead_pct: float
+    stability: float
+    mem_used_mb: float
+    cpu_pct: float
+    cache_stats: Optional[dict] = None
+
+    @property
+    def avg_latency_ms(self) -> float:
+        return statistics.fmean(r.latency_ms for r in self.requests)
+
+    @property
+    def avg_service_ms(self) -> float:
+        return statistics.fmean(r.service_ms for r in self.requests)
+
+    @property
+    def p99_latency_ms(self) -> float:
+        lats = sorted(r.latency_ms for r in self.requests)
+        return lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+
+    @property
+    def throughput_rps(self) -> float:
+        makespan = max(r.finish_ms for r in self.requests) - min(
+            r.submit_ms for r in self.requests)
+        return 1000.0 * len(self.requests) / max(makespan, 1e-9)
+
+    @property
+    def steady_latency_ms(self) -> float:
+        """Inverse-throughput latency (bottleneck stage in steady state)."""
+        return 1000.0 / self.throughput_rps
+
+    @property
+    def avg_comm_ms(self) -> float:
+        return statistics.fmean(r.comm_ms for r in self.requests)
+
+    def row(self) -> dict:
+        return dict(
+            config=self.name,
+            latency_ms=round(self.steady_latency_ms, 2),   # paper's metric
+            service_ms=round(self.avg_service_ms, 2),
+            queue_latency_ms=round(self.avg_latency_ms, 2),
+            p99_ms=round(self.p99_latency_ms, 2),
+            throughput_rps=round(self.throughput_rps, 3),
+            comm_overhead_ms=round(self.avg_comm_ms, 2),
+            network_mb=round(self.network_bytes / 1e6, 2),
+            sched_overhead_ms=round(self.scheduling_overhead_ms, 2),
+            monitor_cpu_pct=round(self.monitor_overhead_pct, 4),
+            stability=round(self.stability, 3),
+            mem_mb=round(self.mem_used_mb, 3),
+            cpu_pct=round(self.cpu_pct, 4),
+        )
+
+
+class DistributedInference:
+    """AMP4EC runtime: plan + placement + request pipeline."""
+
+    def __init__(self, cluster: EdgeCluster, partitioner: ModelPartitioner,
+                 num_partitions: Optional[int] = None,
+                 use_cache: bool = False, opt_level: str = "none",
+                 weights: Optional[Sequence[float]] = None,
+                 refine: bool = False, method: str = "greedy",
+                 executor: Optional[Callable] = None,
+                 assignment: Optional[List[str]] = None,
+                 batch: int = 1):
+        self.cluster = cluster
+        self.partitioner = partitioner
+        self.monitor = ResourceMonitor(cluster)
+        self.scheduler = TaskScheduler()
+        self.deployer = ModelDeployer(cluster, self.monitor, self.scheduler, opt_level)
+        n = num_partitions or len(cluster.online_nodes())
+        self.plan: PartitionPlan = partitioner.plan(n, weights=weights,
+                                                    refine=refine, method=method)
+        self.cache = ResultCache() if use_cache else None
+        self.executor = executor
+        self.batch = batch
+        self.placement = self.deployer.deploy_plan(self.plan, assignment)
+        self._verified = executor is None
+
+    # --- real-numerics verification -----------------------------------------
+
+    def verify_numerics(self, x) -> bool:
+        """Run input through partitions sequentially vs. monolithic once."""
+        assert self.executor is not None
+        y_mono, _ = self.executor(0, len(self.partitioner.graph.layers), x, None)
+        h, res = x, None
+        for part in self.plan.partitions:
+            h, res = self.executor(part.lo, part.hi, h, res)
+        ok = np.allclose(np.asarray(h), np.asarray(y_mono), rtol=1e-5, atol=1e-5)
+        self._verified = True
+        return ok
+
+    # --- elasticity (beyond-paper: the paper fixes boundaries after deploy) ---
+
+    def rebalance(self, method: str = "optimal") -> None:
+        """Re-partition for the *current* online nodes and redeploy.
+
+        Addresses the paper's stated limitation (§V: "partition boundaries
+        are fixed after deployment"): on node join/offline the plan is
+        recomputed with capability weights ∝ node CPU and placed stage-i →
+        node-i (fastest node gets the costliest feasible stage).
+        """
+        nodes = sorted(self.cluster.online_nodes(),
+                       key=lambda n: -n.profile.cpu)
+        weights = [n.profile.cpu for n in nodes]
+        for i in list(self.deployer.deployments):
+            self.deployer.undeploy(i)
+        self.plan = self.partitioner.plan(len(nodes), weights=weights,
+                                          method=method)
+        self.placement = self.deployer.deploy_plan(
+            self.plan, assignment=[n.node_id for n in nodes])
+
+    # --- request processing ----------------------------------------------------
+
+    def run(self, num_requests: int, name: str = "amp4ec",
+            repeat_rate: float = 0.0, seed: int = 0,
+            concurrency: int = 32) -> RunReport:
+        """Process a closed-loop request stream through the partition pipeline.
+
+        ``concurrency``: number of requests in flight (the paper's "batches of
+        32 inference requests"); request r is submitted when request r-W
+        finishes, so reported latency is service latency, not unbounded queue
+        wait. ``repeat_rate``: fraction of requests repeating an earlier input
+        pattern (drives the +Cache configuration, mirroring the paper's
+        identical request batches).
+        """
+        rng = np.random.default_rng(seed)
+        clock = self.cluster.clock
+        pattern_pool = [f"pattern-{i}" for i in range(8)]
+        reqs: List[RequestMetrics] = []
+        total_net_bytes = 0.0
+        sched_oh = 0.0
+        finishes: List[float] = []
+
+        for r in range(num_requests):
+            submit = clock.now_ms
+            if r >= concurrency:
+                submit = max(submit, finishes[r - concurrency])
+            # per-request admission decision by the NSA (10 ms, Table I)
+            stats = self.monitor.online_stats()
+            self.scheduler.select_node(stats)  # admission / routing decision
+            sched_oh += SCHEDULING_OVERHEAD_MS
+            t = submit + SCHEDULING_OVERHEAD_MS
+
+            if repeat_rate > 0 and rng.random() < repeat_rate:
+                sig = rng.choice(pattern_pool)
+            else:
+                sig = f"unique-{r}"
+
+            comm = 0.0
+            hits = 0
+            service = SCHEDULING_OVERHEAD_MS
+            for part in self.plan.partitions:
+                node = self.cluster.nodes[self.placement[part.index]]
+                key = None
+                if self.cache is not None:
+                    key = self.cache.key(self.plan.graph_name, part.index, sig)
+                    if self.cache.get(key) is not None:
+                        hits += 1
+                        self.cache.credit_saved(part.out_bytes)
+                        continue  # skip compute + transfer
+                ws = self.partitioner.working_set(part, batch=self.batch)
+                rec = node.execute(self.cluster.clock, self.cluster.next_task_id(),
+                                   part.cost * self.batch / self.deployer.speedup,
+                                   working_set=ws, start_ms=t)
+                self.scheduler.task_completed(node.node_id, rec.exec_ms)
+                service += rec.exec_ms
+                t = rec.end_ms
+                if part.index < len(self.plan.partitions) - 1:
+                    nxt = self.cluster.nodes[self.placement[part.index + 1]]
+                    tm = transfer_ms(part.out_bytes * self.batch, nxt.profile)
+                    node.send(part.out_bytes * self.batch)
+                    nxt.net_rx_bytes += part.out_bytes * self.batch
+                    total_net_bytes += part.out_bytes * self.batch
+                    comm += tm
+                    service += tm
+                    t += tm
+                if self.cache is not None:
+                    self.cache.put(key, True)
+            reqs.append(RequestMetrics(r, submit, t, comm, hits,
+                                       len(self.plan.partitions), service))
+            finishes.append(t)
+
+        clock.now_ms = max(clock.now_ms, max(r.finish_ms for r in reqs))
+        stats = self.monitor.poll(force=True)
+        online = [s for s in stats.values() if s.online]
+        mem_mb = sum(s.mem_used_mb for s in online)
+        cpu_pct = statistics.fmean(s.cpu_pct for s in online) if online else 0.0
+        stability = statistics.fmean(s.stability for s in online) if online else 0.0
+        return RunReport(
+            name=name, requests=reqs, network_bytes=total_net_bytes,
+            scheduling_overhead_ms=sched_oh / max(num_requests, 1),
+            monitor_overhead_pct=self.monitor.cpu_overhead_pct(),
+            stability=stability, mem_used_mb=mem_mb, cpu_pct=cpu_pct,
+            cache_stats=self.cache.stats() if self.cache else None,
+        )
+
+
+def run_monolithic(cluster: EdgeCluster, partitioner: ModelPartitioner,
+                   num_requests: int, batch: int = 1,
+                   node_id: Optional[str] = None) -> RunReport:
+    """Baseline: whole model on a single node, serial, single-threaded."""
+    d = DistributedInference(cluster, partitioner, num_partitions=1, batch=batch)
+    if node_id is not None:
+        d.placement = {0: node_id}
+    rep = d.run(num_requests, name="monolithic")
+    rep.scheduling_overhead_ms = 0.0  # baseline has no scheduler in the paper
+    return rep
+
+
+def run_task_parallel(cluster: EdgeCluster, partitioner: ModelPartitioner,
+                      num_requests: int, name: str = "amp4ec-replicated",
+                      concurrency: int = 32) -> RunReport:
+    """AMP4EC task-level mode: full model replicated on every node; the NSA
+    routes whole requests. The right regime when the model fits node memory
+    (partitioning is for when it does not — paper §I); used by the
+    adaptability/scalability experiments where nodes join and leave."""
+    from repro.core.cost_model import working_set_bytes
+    from repro.core.monitor import ResourceMonitor
+    from repro.core.scheduler import TaskScheduler, TaskRequirements
+
+    monitor = ResourceMonitor(cluster)
+    scheduler = TaskScheduler()
+    graph = partitioner.graph
+    total_cost = graph.total_cost
+    nlayers = len(graph.layers)
+    ws = working_set_bytes(graph, 0, nlayers)
+    # deploy replicas
+    params_b = sum(l.params for l in graph.layers) * 4
+    for node in cluster.online_nodes():
+        node.receive(params_b)
+        node.mem_used_bytes += params_b
+
+    reqs: List[RequestMetrics] = []
+    finishes: List[float] = []
+    pending: List[tuple] = []      # (finish_ms, node_id, exec_ms) in flight
+    clock = cluster.clock
+    for r in range(num_requests):
+        submit = clock.now_ms
+        if r >= concurrency:
+            submit = max(submit, finishes[r - concurrency])
+        # surface completions that happened before this submit (keeps the
+        # scheduler's queue/active view consistent with simulated time)
+        still = []
+        for fin, nid, ems in pending:
+            if fin <= submit:
+                scheduler.task_completed(nid, ems)
+                cluster.nodes[nid].active_tasks = max(
+                    0, cluster.nodes[nid].active_tasks - 1)
+            else:
+                still.append((fin, nid, ems))
+        pending = still
+        clock.now_ms = max(clock.now_ms, submit)
+
+        stats = monitor.poll(force=True)
+        node_id = scheduler.select_node(
+            [s for s in stats.values() if s.online], TaskRequirements())
+        if node_id is None:                      # all nodes busy/overloaded
+            node_id = min((n for n in cluster.online_nodes()),
+                          key=lambda n: n.busy_until_ms).node_id
+        node = cluster.nodes[node_id]
+        node.active_tasks += 1
+        rec = node.execute(clock, cluster.next_task_id(), total_cost,
+                           working_set=ws, start_ms=submit + SCHEDULING_OVERHEAD_MS)
+        pending.append((rec.end_ms, node_id, rec.exec_ms))
+        reqs.append(RequestMetrics(r, submit, rec.end_ms, 0.0, 0, 1,
+                                   rec.exec_ms + SCHEDULING_OVERHEAD_MS))
+        finishes.append(rec.end_ms)
+
+    clock.now_ms = max(clock.now_ms, max(f.finish_ms for f in reqs))
+    stats = monitor.poll(force=True)
+    online = [s for s in stats.values() if s.online]
+    return RunReport(
+        name=name, requests=reqs,
+        network_bytes=params_b * len(online),
+        scheduling_overhead_ms=SCHEDULING_OVERHEAD_MS,
+        monitor_overhead_pct=monitor.cpu_overhead_pct(),
+        stability=(statistics.fmean(s.stability for s in online) if online else 0.0),
+        mem_used_mb=sum(s.mem_used_mb for s in online),
+        cpu_pct=(statistics.fmean(s.cpu_pct for s in online) if online else 0.0),
+    )

@@ -1,0 +1,147 @@
+"""Task Scheduler with the Node Selection Algorithm (paper §III-C, Alg. 1).
+
+Weighted scoring, Eq. 4:
+    Total = 0.2 * S_R + 0.2 * S_L + 0.1 * S_P + 0.5 * S_B
+with S_R (Eq. 5) resource sufficiency, S_L (Eq. 6) inverse load,
+S_P (Eq. 7) inverse normalized historical execution time, and
+S_B (Eq. 8) fairness 1 / (1 + 2 * task_count).
+
+Nodes with current_load > 0.8 or network latency above threshold are
+skipped, exactly as Alg. 1 lines 4–9. Completed tasks feed the performance
+history; recent execution times are normalized into [0, 1] to form
+AvgExecTime (the paper's §III-C note).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.monitor import NodeStats
+
+DEFAULT_WEIGHTS = dict(resource=0.2, load=0.2, perf=0.1, balance=0.5)
+LOAD_SKIP_THRESHOLD = 0.8
+LATENCY_SKIP_MS = 50.0
+SCHEDULING_OVERHEAD_MS = 10.0      # paper Table I: 10 ms per decision
+HISTORY_LEN = 32
+
+
+@dataclass
+class TaskRequirements:
+    cpu: float = 0.1
+    mem_mb: float = 64.0
+    priority: int = 0
+
+
+@dataclass
+class NodeScore:
+    node_id: str
+    resource: float
+    load: float
+    perf: float
+    balance: float
+    total: float
+    skipped: Optional[str] = None
+
+
+class TaskScheduler:
+    def __init__(self, weights: Optional[Dict[str, float]] = None,
+                 load_threshold: float = LOAD_SKIP_THRESHOLD,
+                 latency_threshold_ms: float = LATENCY_SKIP_MS):
+        self.weights = dict(weights or DEFAULT_WEIGHTS)
+        assert abs(sum(self.weights.values()) - 1.0) < 1e-9
+        self.load_threshold = load_threshold
+        self.latency_threshold_ms = latency_threshold_ms
+        self.exec_history: Dict[str, List[float]] = {}
+        self.task_counts: Dict[str, int] = {}
+        self.decisions = 0
+        self.overhead_ms = 0.0
+
+    # --- scoring (Eq. 5-8) ---------------------------------------------------
+
+    def _resource_score(self, n: NodeStats, req: TaskRequirements) -> float:
+        cpu_term = n.cpu_avail / max(req.cpu, 1e-9)
+        mem_term = n.mem_avail_mb / max(req.mem_mb, 1e-9)
+        return (cpu_term + mem_term) / 2.0
+
+    @staticmethod
+    def _load_score(n: NodeStats) -> float:
+        return 1.0 - n.current_load
+
+    def _perf_score(self, node_id: str) -> float:
+        hist = self.exec_history.get(node_id)
+        if not hist:
+            return 1.0
+        all_times = [t for h in self.exec_history.values() for t in h]
+        tmax = max(all_times)
+        avg = sum(hist) / len(hist)
+        norm = avg / tmax if tmax > 0 else 0.0      # normalized to [0, 1]
+        return 1.0 / (1.0 + norm)
+
+    def _balance_score(self, node_id: str) -> float:
+        return 1.0 / (1.0 + 2.0 * self.task_counts.get(node_id, 0))
+
+    # --- Algorithm 1 -----------------------------------------------------------
+
+    def score_nodes(self, nodes: List[NodeStats],
+                    req: TaskRequirements) -> List[NodeScore]:
+        out = []
+        for n in nodes:
+            if not n.online:
+                out.append(NodeScore(n.node_id, 0, 0, 0, 0, 0, skipped="offline"))
+                continue
+            if n.current_load > self.load_threshold:
+                out.append(NodeScore(n.node_id, 0, 0, 0, 0, 0, skipped="overloaded"))
+                continue
+            if n.net_latency_ms > self.latency_threshold_ms:
+                out.append(NodeScore(n.node_id, 0, 0, 0, 0, 0, skipped="high-latency"))
+                continue
+            if n.cpu_avail <= 0 or n.mem_avail_mb < req.mem_mb:
+                out.append(NodeScore(n.node_id, 0, 0, 0, 0, 0,
+                                     skipped="insufficient-resources"))
+                continue
+            s_r = self._resource_score(n, req)
+            s_l = self._load_score(n)
+            s_p = self._perf_score(n.node_id)
+            s_b = self._balance_score(n.node_id)
+            total = (self.weights["resource"] * min(s_r, 1.0)
+                     + self.weights["load"] * s_l
+                     + self.weights["perf"] * s_p
+                     + self.weights["balance"] * s_b)
+            out.append(NodeScore(n.node_id, s_r, s_l, s_p, s_b, total))
+        return out
+
+    def select_node(self, nodes: List[NodeStats],
+                    req: Optional[TaskRequirements] = None) -> Optional[str]:
+        req = req or TaskRequirements()
+        self.decisions += 1
+        self.overhead_ms += SCHEDULING_OVERHEAD_MS
+        best, best_score = None, 0.0
+        for s in self.score_nodes(nodes, req):
+            if s.skipped is None and s.total > best_score:
+                best, best_score = s.node_id, s.total
+        if best is not None:
+            self.task_counts[best] = self.task_counts.get(best, 0) + 1
+        return best
+
+    # --- history feedback -------------------------------------------------------
+
+    def task_completed(self, node_id: str, exec_ms: float) -> None:
+        h = self.exec_history.setdefault(node_id, [])
+        h.append(exec_ms)
+        if len(h) > HISTORY_LEN:
+            h.pop(0)
+        # recalibrate node load: a completed task frees a slot
+        if self.task_counts.get(node_id, 0) > 0:
+            self.task_counts[node_id] -= 1
+
+    def metrics(self) -> dict:
+        return dict(
+            decisions=self.decisions,
+            overhead_ms=self.overhead_ms,
+            avg_overhead_ms=(self.overhead_ms / self.decisions
+                             if self.decisions else 0.0),
+            queue_lengths={k: v for k, v in self.task_counts.items()},
+            avg_exec_ms={k: sum(v) / len(v)
+                         for k, v in self.exec_history.items() if v},
+        )

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, batches_for_model, frontend_stub, token_batches

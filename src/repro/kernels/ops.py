@@ -1,0 +1,199 @@
+"""Jit'd kernel entry points with implementation dispatch.
+
+``impl`` semantics:
+  - "xla": pure-jnp path (chunked, memory-efficient). Used for lowering on
+    the 512-fake-device dry-run and any non-TPU backend.
+  - "pallas": the TPU kernel (compiled). Production TPU path.
+  - "pallas_interpret": the kernel body executed in Python on CPU —
+    correctness validation in tests.
+  - "auto" (default): pallas on TPU backends, xla elsewhere.
+
+The models call these entry points exclusively, so swapping execution paths
+never touches model code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd_scan import ssd_scan
+
+_DEFAULT_IMPL = None  # overridable process-wide (tests / launcher)
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+def _resolve(impl: Optional[str]) -> str:
+    impl = impl or _DEFAULT_IMPL or "auto"
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _xla_attention_chunked(q, k, v, *, causal, window, scale, q_chunk=2048):
+    """Memory-efficient self-attention: lax.scan over query chunks.
+
+    Keeps the peak score tensor at (B, H, q_chunk, S) instead of (B, H, S, S)
+    — required for the 32k prefill shapes.
+    """
+    b, hq, sq, d = q.shape
+    if sq <= q_chunk:
+        return ref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    assert sq % q_chunk == 0
+    nq = sq // q_chunk
+    kf = ref.repeat_kv(k, hq)
+    vf = ref.repeat_kv(v, hq)
+    scale_ = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    k_pos = jnp.arange(sq)
+
+    def chunk_fn(_, qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32), kf.astype(jnp.float32)) * scale_
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+        mask = jnp.ones((q_chunk, sq), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos - window
+        s = jnp.where(mask, s, ref.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)).astype(q.dtype)
+        return None, o
+
+    _, chunks = jax.lax.scan(chunk_fn, None, jnp.arange(nq))
+    # (nq, b, hq, q_chunk, dv) -> (b, hq, sq, dv); dv may differ from dqk (MLA)
+    dv = vf.shape[-1]
+    return jnp.moveaxis(chunks, 0, 2).reshape(b, hq, sq, dv)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    impl: Optional[str] = None,
+) -> jax.Array:
+    """Self-attention over aligned q/k/v (prefill & training)."""
+    mode = _resolve(impl)
+    if mode == "xla":
+        return _xla_attention_chunked(q, k, v, causal=causal, window=window, scale=scale)
+    if mode == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+    if mode == "pallas_interpret":
+        return flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale, interpret=True
+        )
+    raise ValueError(f"unknown attention impl {mode!r}")
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    length_mask: jax.Array,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention against a (possibly sharded) KV cache.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, S, D); length_mask: (B, S) bool of
+    valid cache slots. Pure jnp — the per-step FLOPs are matvec-bound; the
+    cache-sequence axis may be sharded on the "model" mesh axis (the
+    softmax/contract reductions then lower to small all-reduces).
+    """
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    rep = hq // hkv
+    scale_ = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qg = q.reshape(b, hkv, rep, d)
+    s = jnp.einsum("bgrd,bgsd->bgrs", qg.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale_
+    s = jnp.where(length_mask[:, None, None, :], s, ref.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bgsd->bgrd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba-2)
+# ---------------------------------------------------------------------------
+
+def ssd(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    *,
+    chunk: int = 256,
+    impl: Optional[str] = None,
+):
+    """Chunked SSD scan; returns (y, final_state)."""
+    mode = _resolve(impl)
+    if mode == "xla":
+        return ref.ssd_chunked_ref(x, dt, a, b_mat, c_mat, chunk)
+    if mode == "pallas":
+        return ssd_scan(x, dt, a, b_mat, c_mat, chunk=chunk)
+    if mode == "pallas_interpret":
+        return ssd_scan(x, dt, a, b_mat, c_mat, chunk=chunk, interpret=True)
+    raise ValueError(f"unknown ssd impl {mode!r}")
+
+
+def ssd_decode_step(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    h: jax.Array,
+):
+    """Single-token SSD recurrence update.
+
+    x: (B, H, P); dt: (B, H); a: (H,); b_mat/c_mat: (B, G, N); h: (B, H, P, N).
+    Returns (y (B, H, P), h_new).
+    """
+    B, H, P = x.shape
+    G = b_mat.shape[1]
+    rep = H // G
+    bf = jnp.repeat(b_mat.astype(jnp.float32), rep, axis=1)
+    cf = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=1)
+    da = jnp.exp(dt.astype(jnp.float32) * a.astype(jnp.float32)[None, :])
+    h_new = h * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt.astype(jnp.float32), x.astype(jnp.float32), bf
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, cf).astype(x.dtype)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear recurrence
+# ---------------------------------------------------------------------------
+
+def rglru(a: jax.Array, b: jax.Array, *, chunk: int = 256,
+          impl: Optional[str] = None) -> jax.Array:
+    """Gated linear recurrence h_t = a_t h_{t-1} + b_t over (B, L, W)."""
+    mode = _resolve(impl)
+    if mode == "xla":
+        return ref.rglru_ref(a, b)
+    if mode == "pallas":
+        return rglru_scan(a, b, chunk=min(chunk, a.shape[1]))
+    if mode == "pallas_interpret":
+        return rglru_scan(a, b, chunk=min(chunk, a.shape[1]), interpret=True)
+    raise ValueError(f"unknown rglru impl {mode!r}")

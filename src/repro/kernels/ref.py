@@ -1,0 +1,187 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references: slow, simple, obviously-right
+implementations used by tests (``assert_allclose`` vs. the kernels) and as
+the XLA fallback building blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    """(B, Hkv, S, D) -> (B, Hq, S, D) by repetition (GQA)."""
+    b, hkv, s, d = k.shape
+    if hkv == num_q_heads:
+        return k
+    rep = num_q_heads // hkv
+    return jnp.repeat(k, rep, axis=1)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    """Reference softmax attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). ``window`` > 0 restricts each
+    query to the last ``window`` keys (sliding-window / local attention).
+    Assumes queries and keys are aligned at the sequence end
+    (q position i corresponds to absolute position Sk - Sq + i).
+    """
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    k = repeat_kv(k, hq)
+    v = repeat_kv(v, hq)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if logit_cap > 0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    q_pos = (sk - sq) + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_sequential(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    h0: jax.Array | None = None,
+):
+    """Sequential (scan-over-time) Mamba-2 SSD oracle.
+
+    x:     (B, L, H, P)   inner activations per head
+    dt:    (B, L, H)      positive step sizes
+    a:     (H,)           negative per-head decay log-rate
+    b_mat: (B, L, G, N)   input projections (G groups, heads share a group)
+    c_mat: (B, L, G, N)   output projections
+    h0:    (B, H, P, N)   optional initial state
+
+    Returns (y (B, L, H, P), h_final (B, H, P, N)). All math in fp32.
+    """
+    B, L, H, P = x.shape
+    G, N = b_mat.shape[2], b_mat.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = jnp.repeat(b_mat.astype(jnp.float32), rep, axis=2)  # (B, L, H, N)
+    cf = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=2)
+    af = a.astype(jnp.float32)
+
+    h_init = (
+        jnp.zeros((B, H, P, N), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        da = jnp.exp(dtt * af[None, :])  # (B,H)
+        h = h * da[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(bf, 1, 0),
+        jnp.moveaxis(cf, 1, 0),
+    )
+    h_fin, ys = jax.lax.scan(step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y, h_fin
+
+
+def ssd_chunked_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    chunk: int,
+    h0: jax.Array | None = None,
+):
+    """Chunked SSD in pure jnp — the algorithm the Pallas kernel implements.
+
+    Mathematically identical to :func:`ssd_sequential`; used as the XLA
+    execution path in the models and as a structural reference for the kernel.
+    """
+    B, L, H, P = x.shape
+    G, N = b_mat.shape[2], b_mat.shape[3]
+    rep = H // G
+    assert L % chunk == 0, f"L={L} not divisible by chunk={chunk}"
+    nc = L // chunk
+
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, chunk, H)
+    bf = jnp.repeat(b_mat.astype(jnp.float32), rep, axis=2).reshape(B, nc, chunk, H, N)
+    cf = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=2).reshape(B, nc, chunk, H, N)
+    af = a.astype(jnp.float32)
+
+    loga = dtf * af[None, None, None, :]            # (B, nc, Q, H)
+    lcum = jnp.cumsum(loga, axis=2)                 # inclusive cumsum within chunk
+
+    h_init = (
+        jnp.zeros((B, H, P, N), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc, lc = inp  # (B,Q,H,P), (B,Q,H), (B,Q,H,N) x2, (B,Q,H)
+        # intra-chunk (quadratic, attention-like)
+        cb = jnp.einsum("bqhn,bshn->bhqs", cc, bc)
+        decay = jnp.exp(lc[:, :, None, :] - lc[:, None, :, :])  # (B,Q,S,H)
+        decay = jnp.moveaxis(decay, 3, 1)                       # (B,H,Q,S)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        gate = jnp.where(mask[None, None], cb * decay, 0.0)
+        y = jnp.einsum("bhqs,bsh,bshp->bqhp", gate, dtc, xc)
+        # inter-chunk (contribution of the carried state)
+        y += jnp.einsum("bqh,bqhn,bhpn->bqhp", jnp.exp(lc), cc, h)
+        # state update
+        ltot = lc[:, -1, :]                                     # (B,H)
+        w = jnp.exp(ltot[:, None, :] - lc) * dtc                # (B,Q,H)
+        h_new = h * jnp.exp(ltot)[..., None, None] + jnp.einsum(
+            "bqh,bqhp,bqhn->bhpn", w, xc, bc
+        )
+        return h_new, y
+
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0)
+        for t in (xf, dtf, bf, cf, lcum)
+    )
+    h_fin, ys = jax.lax.scan(chunk_step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, H, P).astype(x.dtype)
+    return y, h_fin
+
+
+def rglru_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Oracle for the RG-LRU recurrence h_t = a_t * h_{t-1} + b_t (h_0=0)."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h.astype(b.dtype)

@@ -1,0 +1,116 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+State-space duality (arXiv:2405.21060) splits the linear recurrence into an
+intra-chunk quadratic (attention-like, MXU-friendly) term and an inter-chunk
+rank-1 state pass.  The kernel walks chunks sequentially along the last grid
+axis, carrying the (head_dim x state) SSM state in VMEM scratch — the TPU
+analogue of the paper's SM-resident state; chunk = 256 keeps the
+(chunk x chunk) gate matrix and operand tiles inside VMEM and the matmuls
+MXU-aligned.
+
+Validated on CPU via ``interpret=True`` against ``ref.ssd_sequential``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref,   # inputs
+    y_ref, h_ref,                         # outputs (per-chunk y, final state)
+    h_scr,                                # VMEM scratch: carried state (P, N)
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros(h_scr.shape, h_scr.dtype)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)              # scalar
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+
+    lcum = jnp.cumsum(dt * a)                        # (Q,) inclusive, <= 0 terms
+    # intra-chunk quadratic term
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)     # (Q, Q)
+    decay = jnp.exp(lcum[:, None] - lcum[None, :])                   # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gate = jnp.where(tri, cb * decay, 0.0)
+    xdt = x * dt[:, None]                                            # (Q, P)
+    y = jax.lax.dot_general(gate, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)      # (Q, P)
+    # inter-chunk: contribution of carried state
+    h = h_scr[...]                                                   # (P, N)
+    y += jnp.exp(lcum)[:, None] * jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # state update: h <- exp(ltot) h + sum_t exp(ltot - l_t) dt_t x_t B_t^T
+    ltot = lcum[-1]
+    w = jnp.exp(ltot - lcum) * dt                                    # (Q,)
+    h_scr[...] = h * jnp.exp(ltot) + jax.lax.dot_general(
+        x * w[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                          # (P, N)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        h_ref[0, 0] = h_scr[...].astype(h_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    """Chunked SSD.
+
+    x: (B, L, H, P); dt: (B, L, H); a: (H,); b_mat/c_mat: (B, L, G, N).
+    Returns (y (B, L, H, P), h_final (B, H, P, N)); fp32 state.
+    """
+    B, L, H, P = x.shape
+    G, N = b_mat.shape[2], b_mat.shape[3]
+    assert L % chunk == 0, f"L={L} % chunk={chunk}"
+    nc = L // chunk
+    a2 = a.reshape(H, 1)
+
+    grid = (B, H, nc)
+    y, h = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c, G=G, H=H: (b, c, h * G // H, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c, G=G, H=H: (b, c, h * G // H, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, b_mat, c_mat)
+    return y, h

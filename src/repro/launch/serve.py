@@ -1,0 +1,42 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Reduced model, AMP4EC-scheduled batched serving on the simulated edge
+cluster (see examples/serve_adaptive.py for the scripted adaptation demo).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.cluster import make_paper_cluster
+from repro.models.model import Model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = Model(cfg)
+    params, _ = model.init()
+    cluster = make_paper_cluster()
+    engine = ServingEngine(cfg, params, cluster, max_batch=args.max_batch)
+    reqs = [Request(i, np.arange(1, args.prompt_len + 1, dtype=np.int32),
+                    args.new_tokens) for i in range(args.requests)]
+    m = engine.serve(reqs)
+    for k, v in m.items():
+        if k != "scheduler":
+            print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Griffin / RecurrentGemma recurrent block (arXiv:2402.19427).
+
+Gated-linear recurrent unit (RG-LRU) branch + GeGLU gate branch. Prefill uses
+``jax.lax.associative_scan`` over the linear recurrence (log-depth — the
+TPU-native analogue of the paper's sequential scan); decode carries
+(conv window, recurrent state) per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.ssm import _causal_depthwise
+from repro.utils.params import ParamBuilder
+from repro.utils.sharding import shard
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin §2.4)
+_CONV_K = 4
+
+
+def lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru(b: ParamBuilder, name: str, cfg: ModelConfig):
+    W = lru_width(cfg)
+    sub = b.sub(name)
+    sub.param("w_x", (cfg.d_model, W), (None, "ff"))
+    sub.param("w_y", (cfg.d_model, W), (None, "ff"))
+    sub.param("conv", (_CONV_K, W), (None, "ff"), scale=0.5)
+    sub.param("w_rg", (W, W), ("ff", None))          # recurrence gate
+    sub.param("b_rg", (W,), (None,), init="zeros")
+    sub.param("w_ig", (W, W), ("ff", None))          # input gate
+    sub.param("b_ig", (W,), (None,), init="zeros")
+    sub.param("lam", (W,), (None,), init="ones", dtype=jnp.float32)
+    sub.param("w_out", (W, cfg.d_model), ("ff", None))
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(xc @ p["w_rg"] + p["b_rg"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xc @ p["w_ig"] + p["b_ig"]).astype(jnp.float32)
+    log_a = -_C * r * jax.nn.softplus(p["lam"])       # (B, L, W) <= 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xc.astype(jnp.float32)
+    )
+    return a, gated_in
+
+
+def apply_rglru(p, x: jax.Array, cfg: ModelConfig, state=None):
+    """Full-sequence recurrent block. x: (B, L, D). Returns (out, state)."""
+    B, L, D = x.shape
+    y_gate = jax.nn.gelu(x @ p["w_y"])
+    xb = x @ p["w_x"]
+    cstate = None if state is None else state["conv"]
+    xc, new_conv = _causal_depthwise(xb, p["conv"], cstate)
+    a, gated_in = _gates(p, xc)
+
+    h0 = None if state is None else state["h"]
+    if h0 is not None:
+        # fold carried state into the first step via a virtual element
+        gated_in = gated_in.at[:, 0, :].add(a[:, 0, :] * h0)
+    # linear recurrence h_t = a_t h_{t-1} + b_t: Pallas chunked-scan kernel
+    # on TPU, log-depth associative scan on other backends (kernels/ops.py)
+    from repro.kernels import ops
+    hv = ops.rglru(a, gated_in)
+    h = hv.astype(x.dtype)
+    h = shard(h, "batch", None, "ff")
+    out = (h * y_gate) @ p["w_out"]
+    new_state = {"conv": new_conv, "h": hv[:, -1, :]}
+    return out, new_state
+
+
+def apply_rglru_decode(p, x: jax.Array, cfg: ModelConfig, state):
+    """One-token step. x: (B, 1, D); state: {"conv": (B,3,W), "h": (B,W)}."""
+    B = x.shape[0]
+    xt = x[:, 0, :]
+    y_gate = jax.nn.gelu(xt @ p["w_y"])
+    xb = xt @ p["w_x"]
+    window = jnp.concatenate([state["conv"], xb[:, None, :]], axis=1)
+    xc = jnp.einsum("bkc,kc->bc", window, p["conv"])
+    new_conv = window[:, 1:, :]
+    a, gated_in = _gates(p, xc[:, None, :])
+    h_new = a[:, 0, :] * state["h"] + gated_in[:, 0, :]
+    out = ((h_new.astype(x.dtype) * y_gate) @ p["w_out"])[:, None, :]
+    return out, {"conv": new_conv, "h": h_new}

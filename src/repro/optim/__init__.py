@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWState, Optimizer, adamw, global_norm, opt_state_specs
+from repro.optim.schedule import constant, cosine_with_warmup

@@ -1,0 +1,2 @@
+from repro.train.loop import train
+from repro.train.step import make_eval_step, make_train_step

@@ -1,0 +1,55 @@
+"""Training loop: data -> jit'd step -> logging -> checkpoints."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import save_checkpoint
+from repro.models.model import Model
+from repro.optim.adamw import Optimizer
+
+
+def train(
+    model: Model,
+    optimizer: Optimizer,
+    batches: Iterator[Dict[str, np.ndarray]],
+    num_steps: int,
+    *,
+    params=None,
+    log_every: int = 20,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    remat: bool = True,
+    log_fn: Callable[[str], None] = print,
+):
+    from repro.train.step import make_train_step
+
+    if params is None:
+        params, _ = model.init(jax.random.PRNGKey(0))
+    opt_state = optimizer.init(params)
+    step_fn = jax.jit(make_train_step(model, optimizer, remat=remat))
+
+    history = []
+    t0 = time.perf_counter()
+    tokens_seen = 0
+    for step in range(1, num_steps + 1):
+        batch = next(batches)
+        tokens_seen += int(np.prod(batch["tokens"].shape))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps or step == 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            m.update(step=step, tok_per_s=tokens_seen / max(dt, 1e-9))
+            history.append(m)
+            log_fn(f"step {step:5d}  loss {m['loss']:.4f}  nll {m['nll']:.4f}  "
+                   f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}  "
+                   f"tok/s {m['tok_per_s']:.0f}")
+        if ckpt_dir and ckpt_every and step % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step, params, opt_state)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, num_steps, params, opt_state)
+    return params, opt_state, history

@@ -1,0 +1,35 @@
+"""Training step factory: loss + grad + clip + AdamW, sharding-aware."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import Optimizer
+
+
+def make_train_step(model: Model, optimizer: Optimizer, remat: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        total, nll = model.loss_fn(params, batch, remat=remat)
+        return total, nll
+
+    def train_step(params, opt_state, batch):
+        (loss, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = optimizer.update(grads, opt_state, params)
+        metrics = dict(loss=loss, nll=nll, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        _, nll = model.loss_fn(params, batch, remat=False)
+        return dict(nll=nll, ppl=jnp.exp(nll))
+    return eval_step

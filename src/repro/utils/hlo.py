@@ -1,0 +1,96 @@
+"""HLO inspection: collective-traffic accounting from compiled modules.
+
+``cost_analysis()`` reports FLOPs and bytes but not collective traffic, so we
+parse the (SPMD-partitioned, per-device) optimized HLO text and sum the
+shapes of every collective op, with per-kind wire factors:
+
+  all-reduce          2x (ring: reduce-scatter + all-gather)
+  all-gather          1x result bytes
+  reduce-scatter      1x operand bytes (result reported; x group_size)
+  all-to-all          1x
+  collective-permute  1x
+
+Shapes in optimized HLO are per-device shard shapes, so the returned number
+is bytes-on-wire per device.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)|[\w\[\],{}\s]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every shape literal in a line fragment."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float], Dict[str, int]]:
+    """Returns (total_wire_bytes_per_device, bytes_by_kind, count_by_kind).
+
+    CPU-backend correction: XLA's float-normalization pass promotes bf16
+    reductions to f32 on hosts without native bf16 ALUs (reduction fn named
+    ``*_promoted``); a real TPU runs those collectives in bf16, so promoted
+    ops are counted at half their printed bytes.
+    """
+    by_kind: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done" in line.split("=")[1][:60]:
+            continue  # async completion of an op already counted at -start
+        lhs = line.split("=")[1]
+        # result shape(s) appear immediately after '=' and before the op name
+        head = lhs[: lhs.find(kind)]
+        b = _shape_bytes(head)
+        if "_promoted" in line:
+            b *= 0.5  # bf16 on TPU; promoted to f32 only by the CPU backend
+        by_kind[kind] += b * _WIRE_FACTOR[kind]
+        counts[kind] += 1
+    return float(sum(by_kind.values())), dict(by_kind), dict(counts)
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "all-reduce", "all-gather",
+                                     "reduce-scatter", "all-to-all",
+                                     "collective-permute", "custom-call",
+                                     "dynamic-update-slice", "scatter")) -> Dict[str, int]:
+    hist: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if re.search(rf"=\s*[\w\[\],{{}}\s()]*?{op}(?:-start)?\(", line):
+                hist[op] += 1
+                break
+    return dict(hist)

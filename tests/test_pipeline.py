@@ -1,0 +1,156 @@
+"""AMP4EC end-to-end pipeline: numerics, placement, cache, failure recovery."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.cluster import EdgeCluster, make_paper_cluster
+from repro.core.cost_model import PROFILES, execution_ms, transfer_ms
+from repro.core.deployer import ModelDeployer
+from repro.core.monitor import ResourceMonitor
+from repro.core.partitioner import ModelPartitioner
+from repro.core.pipeline import (DistributedInference, run_monolithic,
+                                 run_task_parallel)
+from repro.core.scheduler import TaskScheduler
+from repro.models.graph import mobilenetv2_graph
+from repro.models.mobilenetv2 import build_mobilenetv2, run_full, run_range
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return mobilenetv2_graph()
+
+
+@pytest.fixture(scope="module")
+def leaves():
+    return build_mobilenetv2()
+
+
+def test_partitioned_numerics_match_monolithic(graph, leaves):
+    """Real JAX compute: any partitioning reproduces monolithic output."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 96, 96, 3))
+    y_full = np.asarray(run_full(leaves, x))
+    for cuts in ([116], [108, 124], [40, 80, 120]):
+        h, res = x, None
+        lo = 0
+        for cut in cuts + [141]:
+            h, res = run_range(leaves, lo, cut, h, res)
+            lo = cut
+        np.testing.assert_allclose(np.asarray(h), y_full, rtol=1e-5, atol=1e-5)
+
+
+def test_pipeline_verify_numerics(graph, leaves):
+    cluster = make_paper_cluster()
+    def executor(lo, hi, x, res):
+        return run_range(leaves, lo, hi, x, res)
+    d = DistributedInference(cluster, ModelPartitioner(graph), executor=executor)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 96, 96, 3))
+    assert d.verify_numerics(x)
+
+
+def test_throughput_improves_over_monolithic(graph):
+    c0 = EdgeCluster()
+    c0.add_node("mono", "monolithic")
+    mono = run_monolithic(c0, ModelPartitioner(graph), 60)
+    c1 = make_paper_cluster()
+    amp = DistributedInference(c1, ModelPartitioner(graph)).run(60)
+    assert amp.throughput_rps > mono.throughput_rps * 1.3
+    assert amp.steady_latency_ms < mono.steady_latency_ms
+
+
+def test_cache_reduces_latency_and_network(graph):
+    c1 = make_paper_cluster()
+    plain = DistributedInference(c1, ModelPartitioner(graph)).run(60)
+    c2 = make_paper_cluster()
+    cached = DistributedInference(c2, ModelPartitioner(graph), use_cache=True
+                                  ).run(60, repeat_rate=0.8)
+    assert cached.steady_latency_ms < plain.steady_latency_ms
+    assert cached.network_bytes < plain.network_bytes
+    assert cached.cache_stats["hit_rate"] > 0.3
+
+
+def test_scheduling_overhead_is_10ms(graph):
+    c = make_paper_cluster()
+    rep = DistributedInference(c, ModelPartitioner(graph)).run(10)
+    assert rep.scheduling_overhead_ms == pytest.approx(10.0)
+
+
+def test_monitor_overhead_below_1pct(graph):
+    c = make_paper_cluster()
+    rep = DistributedInference(c, ModelPartitioner(graph)).run(50)
+    assert rep.monitor_overhead_pct < 1.0     # paper §IV-E
+
+
+def test_deployer_failure_recovery(graph):
+    cluster = make_paper_cluster()
+    monitor = ResourceMonitor(cluster)
+    sched = TaskScheduler()
+    dep = ModelDeployer(cluster, monitor, sched)
+    plan = ModelPartitioner(graph).plan(3)
+    placed = dep.deploy_plan(plan)
+    victim = placed[0]
+    cluster.remove_node(victim)
+    moved = dep.handle_node_offline(victim)
+    assert moved, "partitions on the offline node must be redeployed"
+    for i, node_id in dep.assignment().items():
+        assert cluster.nodes[node_id].online
+
+
+def test_node_join_improves_task_parallel_throughput(graph):
+    c1 = make_paper_cluster()
+    base = run_task_parallel(c1, ModelPartitioner(graph), 60)
+    c2 = make_paper_cluster()
+    c2.add_node("edge-3-high", "high")     # paper scenario: new device added
+    up = run_task_parallel(c2, ModelPartitioner(graph), 60)
+    assert up.throughput_rps > base.throughput_rps * 1.2
+
+
+def test_task_parallel_load_follows_capability(graph):
+    c = make_paper_cluster()
+    run_task_parallel(c, ModelPartitioner(graph), 100)
+    counts = {n.node_id: len(n.history) for n in c.online_nodes()}
+    assert counts["edge-0-high"] > counts["edge-1-medium"] > counts["edge-2-low"]
+
+
+def test_execution_time_scales_inverse_cpu():
+    t_high = execution_ms(1e6, PROFILES["high"])
+    t_low = execution_ms(1e6, PROFILES["low"])
+    assert t_low > t_high * 2.0   # 0.4 cpu vs 1.0 cpu
+
+
+def test_memory_pressure_slows_execution():
+    p = PROFILES["low"]
+    fast = execution_ms(1e6, p, working_set_bytes=0)
+    slow = execution_ms(1e6, p, working_set_bytes=2 * p.mem_bytes)
+    assert slow > fast * 2
+
+
+def test_transfer_time_model():
+    p = PROFILES["high"]
+    assert transfer_ms(0, p) == 0.0
+    assert transfer_ms(1e6, p) > p.net_latency_ms
+
+
+def test_rebalance_on_node_join_improves_pipeline(graph):
+    """Beyond-paper elasticity: re-partitioning after a join lifts throughput
+    (the paper's §V limitation: boundaries fixed after deployment)."""
+    c = make_paper_cluster()
+    d = DistributedInference(c, ModelPartitioner(graph))
+    before = d.run(60, name="pre").throughput_rps
+    c.add_node("edge-3-high", "high")
+    d.rebalance()
+    assert len(d.plan.partitions) == 4
+    after = d.run(60, name="post").throughput_rps
+    assert after > before * 1.1
+
+
+def test_rebalance_after_offline_keeps_service(graph):
+    c = make_paper_cluster()
+    d = DistributedInference(c, ModelPartitioner(graph))
+    c.remove_node("edge-2-low")
+    d.rebalance()
+    assert len(d.plan.partitions) == 2
+    rep = d.run(30, name="post-offline")
+    assert rep.throughput_rps > 0
+    for nid in d.placement.values():
+        assert c.nodes[nid].online

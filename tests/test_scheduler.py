@@ -1,0 +1,118 @@
+"""Task Scheduler / NSA (paper Alg. 1, Eq. 4-8) behaviour + properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.monitor import NodeStats
+from repro.core.scheduler import (DEFAULT_WEIGHTS, TaskRequirements,
+                                  TaskScheduler)
+
+
+def stats(node_id="n0", online=True, cpu=1.0, load=0.0, lat=1.0,
+          mem_limit=1024.0, mem_used=0.0):
+    return NodeStats(node_id=node_id, online=online, cpu=cpu, cpu_pct=0.0,
+                     mem_limit_mb=mem_limit, mem_used_mb=mem_used,
+                     mem_pct=100 * mem_used / mem_limit, net_rx_bytes=0,
+                     net_tx_bytes=0, current_load=load, net_latency_ms=lat,
+                     stability=1.0)
+
+
+def test_weights_match_paper_eq4():
+    assert DEFAULT_WEIGHTS == dict(resource=0.2, load=0.2, perf=0.1, balance=0.5)
+
+
+def test_skips_overloaded_nodes():
+    s = TaskScheduler()
+    scored = s.score_nodes([stats("a", load=0.9), stats("b", load=0.5)],
+                           TaskRequirements())
+    assert scored[0].skipped == "overloaded"
+    assert scored[1].skipped is None
+
+
+def test_skips_high_latency_nodes():
+    s = TaskScheduler()
+    scored = s.score_nodes([stats("a", lat=100.0), stats("b")],
+                           TaskRequirements())
+    assert scored[0].skipped == "high-latency"
+
+
+def test_skips_offline_and_insufficient_memory():
+    s = TaskScheduler()
+    scored = s.score_nodes(
+        [stats("a", online=False), stats("b", mem_used=1020.0)],
+        TaskRequirements(mem_mb=64))
+    assert scored[0].skipped == "offline"
+    assert scored[1].skipped == "insufficient-resources"
+
+
+def test_select_returns_none_when_all_ineligible():
+    s = TaskScheduler()
+    assert s.select_node([stats("a", load=0.95)]) is None
+
+
+def test_balance_score_prefers_idle_node():
+    s = TaskScheduler()
+    nodes = [stats("a"), stats("b")]
+    first = s.select_node(nodes)
+    second = s.select_node(nodes)
+    assert {first, second} == {"a", "b"}   # fairness: alternates
+
+
+def test_performance_history_influences_choice():
+    s = TaskScheduler()
+    # node "slow" has terrible history; identical otherwise
+    for _ in range(8):
+        s.task_completed("slow", 5000.0)
+        s.task_completed("fast", 10.0)
+    picks = [s.select_node([stats("slow"), stats("fast")]) for _ in range(2)]
+    s2 = TaskScheduler()
+    assert picks[0] == "fast"
+
+
+def test_eq5_resource_score():
+    s = TaskScheduler()
+    n = stats("a", cpu=1.0, mem_limit=1024, mem_used=512)
+    req = TaskRequirements(cpu=0.5, mem_mb=256)
+    # (1.0/0.5 + 512/256)/2 = 2.0
+    assert s._resource_score(n, req) == pytest.approx(2.0)
+
+
+def test_eq8_balance_score():
+    s = TaskScheduler()
+    s.task_counts["a"] = 3
+    assert s._balance_score("a") == pytest.approx(1.0 / 7.0)
+    assert s._balance_score("new") == 1.0
+
+
+@given(loads=st.lists(st.floats(0.0, 0.79), min_size=2, max_size=10))
+@settings(max_examples=100, deadline=None)
+def test_selected_node_has_max_total_score(loads):
+    s = TaskScheduler()
+    nodes = [stats(f"n{i}", load=l) for i, l in enumerate(loads)]
+    scored = {x.node_id: x.total for x in s.score_nodes(nodes, TaskRequirements())}
+    pick = s.select_node(nodes)
+    assert pick is not None
+    assert scored[pick] == pytest.approx(max(scored.values()))
+
+
+@given(n_tasks=st.integers(10, 60))
+@settings(max_examples=20, deadline=None)
+def test_fairness_distribution_property(n_tasks):
+    """With identical nodes and no completions, the balance term must spread
+    tasks within +-1 of each other (Eq. 8 dominates at weight 0.5)."""
+    s = TaskScheduler()
+    nodes = [stats(f"n{i}") for i in range(4)]
+    for _ in range(n_tasks):
+        s.select_node(nodes)
+    counts = [s.task_counts.get(f"n{i}", 0) for i in range(4)]
+    assert max(counts) - min(counts) <= 1
+
+
+def test_overhead_accounting():
+    s = TaskScheduler()
+    nodes = [stats("a")]
+    for _ in range(5):
+        s.select_node(nodes)
+    m = s.metrics()
+    assert m["decisions"] == 5
+    assert m["avg_overhead_ms"] == pytest.approx(10.0)   # paper Table I
