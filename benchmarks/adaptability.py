@@ -1,19 +1,111 @@
-"""Paper §IV-C + §I motivation: adaptability to node join / node offline.
+"""Paper §IV-C + §I motivation: adaptability to dynamic cluster events.
 
-Three scenarios mirroring the paper's standard / scale-up / scale-down
-deployments, plus the two dynamic events the paper motivates in §I:
-a new device added mid-run and a device going offline (partition redeploy).
+Two parts:
+
+1. The paper's deployment scenarios (standard / scale-up / scale-down) and
+   the task-parallel node-join event, as in the seed.
+2. Closed-loop re-partitioning through the ``AdaptationController``: mid-run
+   node death, CPU throttle to the paper's 0.4-CPU/512MB low-resource
+   profile, a network-latency spike, and node recovery. The node-death
+   scenario is run twice — with the controller, and with the degraded
+   fixed-boundary fallback (redeploy-only, the paper's §V limitation) — and
+   the adaptive run must be strictly faster.
+
+Run:  PYTHONPATH=src python benchmarks/adaptability.py
 """
 
 from __future__ import annotations
 
+from repro.core.adaptation import (cpu_throttle, latency_spike, node_death,
+                                   node_recovery)
 from repro.core.cluster import EdgeCluster, make_paper_cluster
-from repro.core.deployer import ModelDeployer
-from repro.core.monitor import ResourceMonitor
 from repro.core.partitioner import ModelPartitioner
 from repro.core.pipeline import DistributedInference, run_task_parallel
-from repro.core.scheduler import TaskScheduler
 from repro.models.graph import mobilenetv2_graph
+
+WARMUP_REQUESTS = 20
+FAULT_REQUESTS = 40
+CONCURRENCY = 4          # closed-loop window; submits track finishes so the
+                         # simulated clock advances and scenario events fire
+
+
+def _pipeline(adaptive: bool):
+    d = DistributedInference(make_paper_cluster(),
+                             ModelPartitioner(mobilenetv2_graph()),
+                             adaptive=adaptive)
+    d.run(WARMUP_REQUESTS, name="warmup", concurrency=CONCURRENCY)
+    return d
+
+
+def _fault_phase(d: DistributedInference, name: str, events_fn):
+    t0 = d.cluster.clock.now_ms
+    return d.run(FAULT_REQUESTS, name=name, concurrency=CONCURRENCY,
+                 scenario=events_fn(t0, d))
+
+
+def closed_loop_rows():
+    rows = []
+
+    # --- node death: adaptive vs. degraded fixed-boundary continuation -------
+    def death(t0, d):
+        return [node_death(t0 + 50.0, d.placement[max(d.placement)])]
+
+    adaptive = _pipeline(adaptive=True)
+    rep_a = _fault_phase(adaptive, "death-adaptive", death)
+    degraded = _pipeline(adaptive=False)
+    rep_d = _fault_phase(degraded, "death-degraded", death)
+
+    ctl = adaptive.controller
+    repartitions = [e for e in ctl.events if e.kind == "migrate"]
+    assert repartitions, "node death must produce a re-partition decision"
+    assert rep_a.avg_latency_ms < rep_d.avg_latency_ms, (
+        "adaptation must beat continuing on the degraded plan "
+        f"({rep_a.avg_latency_ms:.1f}ms vs {rep_d.avg_latency_ms:.1f}ms)")
+    rows.append(dict(
+        config="closed-loop-node-death",
+        adaptive_latency_ms=round(rep_a.avg_latency_ms, 1),
+        degraded_latency_ms=round(rep_d.avg_latency_ms, 1),
+        adaptive_steady_ms=round(rep_a.steady_latency_ms, 1),
+        degraded_steady_ms=round(rep_d.steady_latency_ms, 1),
+        improvement_pct=round(100 * (1 - rep_a.avg_latency_ms
+                                     / rep_d.avg_latency_ms), 1),
+        migrations=ctl.migrations,
+        event_log=[str(e) for e in ctl.events],
+    ))
+
+    # --- CPU throttle to the paper's low-resource profile (0.4 CPU / 512MB) --
+    d = _pipeline(adaptive=True)
+    rep = _fault_phase(d, "cpu-throttle",
+                       lambda t0, d: [cpu_throttle(t0 + 50.0, "edge-0-high")])
+    rows.append(dict(config="closed-loop-cpu-throttle",
+                     steady_ms=round(rep.steady_latency_ms, 1),
+                     migrations=d.controller.migrations,
+                     event_log=[str(e) for e in d.controller.events]))
+
+    # --- network-latency spike: controller evaluates, migrates only if paid --
+    d = _pipeline(adaptive=True)
+    rep = _fault_phase(
+        d, "latency-spike",
+        lambda t0, d: [latency_spike(t0 + 50.0, d.placement[0], 120.0)])
+    rows.append(dict(config="closed-loop-latency-spike",
+                     steady_ms=round(rep.steady_latency_ms, 1),
+                     migrations=d.controller.migrations,
+                     decisions=d.controller.decisions,
+                     event_log=[str(e) for e in d.controller.events]))
+
+    # --- node death followed by recovery: scale down, then back up -----------
+    def death_recovery(t0, d):
+        victim = d.placement[max(d.placement)]
+        return [node_death(t0 + 50.0, victim),
+                node_recovery(t0 + 4000.0, victim)]
+
+    d = _pipeline(adaptive=True)
+    rep = _fault_phase(d, "death-recovery", death_recovery)
+    rows.append(dict(config="closed-loop-death-recovery",
+                     steady_ms=round(rep.steady_latency_ms, 1),
+                     migrations=d.controller.migrations,
+                     event_log=[str(e) for e in d.controller.events]))
+    return rows
 
 
 def run():
@@ -37,7 +129,7 @@ def run():
                          latency_ms=round(rep.steady_latency_ms, 2),
                          stability=round(rep.stability, 3)))
 
-    # dynamic: node joins mid-run
+    # dynamic: node joins mid-run (task-parallel mode)
     c = make_paper_cluster()
     part = ModelPartitioner(g)
     before = run_task_parallel(c, part, 60, name="pre-join")
@@ -49,26 +141,15 @@ def run():
                      gain_pct=round(100 * (after.throughput_rps
                                            / before.throughput_rps - 1), 1)))
 
-    # dynamic: node offline -> partitions redeploy, service continues
-    c = make_paper_cluster()
-    monitor = ResourceMonitor(c)
-    sched = TaskScheduler()
-    dep = ModelDeployer(c, monitor, sched)
-    plan = ModelPartitioner(g).plan(3)
-    placed = dep.deploy_plan(plan)
-    victim = placed[2]
-    c.remove_node(victim)
-    moved = dep.handle_node_offline(victim)
-    # run the pipeline on the surviving placement
-    d = DistributedInference.__new__(DistributedInference)
-    rows.append(dict(config="dynamic-node-offline", victim=victim,
-                     partitions_redeployed=len(moved),
-                     all_partitions_online=all(
-                         c.nodes[nid].online for nid in dep.assignment().values()),
-                     redeploy_events=dep.redeploy_events))
+    # closed-loop adaptive re-partitioning scenarios
+    rows.extend(closed_loop_rows())
     return rows
 
 
 if __name__ == "__main__":
     for row in run():
+        log = row.pop("event_log", None)
         print(row)
+        if log:
+            for line in log:
+                print("    ", line)

@@ -8,6 +8,9 @@ with REAL greedy decoding, including the paper's two dynamic scenarios:
   phase 1: 3-node cluster, 24 batched requests
   phase 2: a new device joins  -> throughput rises
   phase 3: a device goes offline -> NSA routes around it, no failures
+  phase 4: the partitioned pipeline runs CLOSED-LOOP: the
+           AdaptationController re-partitions the model live when a node
+           dies mid-run and again when it recovers
 
 Run:  PYTHONPATH=src python examples/serve_adaptive.py
 """
@@ -15,8 +18,12 @@ Run:  PYTHONPATH=src python examples/serve_adaptive.py
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.adaptation import node_death, node_recovery
 from repro.core.cluster import make_paper_cluster
+from repro.core.partitioner import ModelPartitioner
+from repro.core.pipeline import DistributedInference
 from repro.data import DataConfig, batches_for_model
+from repro.models.graph import transformer_graph
 from repro.models.model import Model
 from repro.optim import adamw, cosine_with_warmup
 from repro.serving import Request, ServingEngine
@@ -66,6 +73,28 @@ def main():
     print("cluster event log:")
     for e in cluster.events:
         print("  ", e)
+
+    print("\nphase 4: closed-loop re-partitioning (AdaptationController)")
+    # edge-scale LM graph (int8-deployed so partitions fit the 512MB nodes)
+    graph = transformer_graph(get_config("mamba2-130m"), batch=1, seq=512)
+    c4 = make_paper_cluster()
+    pipe = DistributedInference(c4, ModelPartitioner(graph), opt_level="int8",
+                                adaptive=True)
+    warm = pipe.run(16, name="steady", concurrency=4)
+    t0 = c4.clock.now_ms
+    victim = pipe.placement[max(pipe.placement)]
+    span = warm.steady_latency_ms * 48      # fault early, recover mid-run
+    rep = pipe.run(48, name="fault+recover", concurrency=4,
+                   scenario=[node_death(t0 + 0.1 * span, victim),
+                             node_recovery(t0 + 0.4 * span, victim)])
+    print(f"  steady {warm.steady_latency_ms:.1f} ms -> with fault+recovery "
+          f"{rep.steady_latency_ms:.1f} ms "
+          f"({pipe.controller.migrations} live migrations)")
+    print("  adaptation event log:")
+    for line in rep.adaptation["events"]:
+        print("   ", line)
+    assert pipe.controller.migrations >= 2, \
+        "death and recovery must each trigger a live re-partition"
 
 
 if __name__ == "__main__":

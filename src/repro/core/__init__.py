@@ -5,12 +5,17 @@ Components (paper §III):
   B. ModelPartitioner      — repro.core.partitioner
   C. TaskScheduler (NSA)   — repro.core.scheduler
   D. ModelDeployer (+cache)— repro.core.deployer / repro.core.cache
+  E. AdaptationController  — repro.core.adaptation (closed monitor ->
+     partitioner -> deployer loop: live re-partitioning on drift)
 
 plus the simulated heterogeneous cluster (repro.core.cluster), the
 calibrated cost/timing model (repro.core.cost_model) and the end-to-end
 pipeline runtime (repro.core.pipeline).
 """
 
+from repro.core.adaptation import (AdaptationConfig, AdaptationController,
+                                   ScenarioEvent, cpu_throttle, latency_spike,
+                                   node_death, node_recovery)
 from repro.core.cache import ResultCache
 from repro.core.cluster import EdgeCluster, EdgeNode, make_paper_cluster
 from repro.core.cost_model import NodeProfile, PROFILES
@@ -21,6 +26,8 @@ from repro.core.pipeline import DistributedInference, RunReport, run_monolithic
 from repro.core.scheduler import TaskRequirements, TaskScheduler
 
 __all__ = [
+    "AdaptationConfig", "AdaptationController", "ScenarioEvent",
+    "cpu_throttle", "latency_spike", "node_death", "node_recovery",
     "ResultCache", "EdgeCluster", "EdgeNode", "make_paper_cluster",
     "NodeProfile", "PROFILES", "ModelDeployer", "NodeStats", "ResourceMonitor",
     "ModelPartitioner", "Partition", "PartitionPlan", "DistributedInference",

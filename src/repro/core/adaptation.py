@@ -1,0 +1,356 @@
+"""Adaptation Controller: the closed monitor -> partitioner -> deployer loop.
+
+The paper's central claim is *adaptivity* — real-time resource monitoring
+feeding dynamic partitioning and scheduling — but a plan computed once at
+deploy time is static. This module closes the loop at runtime:
+
+  1. every fresh ``ResourceMonitor`` poll the controller checks for *drift*:
+     a placement node offline, a stability drop, sustained load above
+     threshold, a network-latency spike, a node's live capability deviating
+     from the value the current plan assumed (CPU throttle / recovery /
+     join), or cost-model miscalibration beyond a configurable band;
+  2. on drift it recomputes capability weights from live ``NodeStats`` and
+     asks ``ModelPartitioner.plan(..., method="optimal")`` for a candidate
+     plan with stage i on the i-th most capable node;
+  3. it migrates through ``ModelDeployer.migrate_plan`` only when the
+     predicted bottleneck improvement (amortized over a request horizon)
+     exceeds the migration cost — params_bytes transfer via
+     ``cost_model.transfer_ms`` plus a per-moved-partition redeploy penalty.
+     A dead placement node forces migration regardless (the service is down).
+
+In-flight requests drain on the old plan (the pipeline captures plan +
+placement per request at submit); new requests route to the new plan. Every
+decision is an ``AdaptationEvent`` in ``controller.events``, surfaced via
+``RunReport.adaptation``.
+
+Dynamic scenarios (mid-run node death, CPU throttle to the paper's
+0.4-CPU/512MB low-resource profile, latency spike, node recovery) are
+expressed as ``ScenarioEvent``s the pipeline applies at submit boundaries.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.cluster import EdgeCluster
+from repro.core.cost_model import (execution_ms, partition_cost,
+                                   working_set_bytes)
+from repro.core.monitor import (LATENCY_THRESHOLD_MS, NodeStats,
+                                POLL_INTERVAL_MS)
+from repro.core.partitioner import Partition, PartitionPlan
+
+
+@dataclass
+class AdaptationConfig:
+    load_threshold: float = 0.8         # sustained current_load trigger
+    sustained_polls: int = 3            # consecutive polls above threshold
+    stability_threshold: float = 0.7    # stability drop trigger
+    calibration_band: float = 0.25      # |calibration/planned - 1| beyond band
+    capacity_band: float = 0.25         # live capability drift vs. plan-time
+    latency_threshold_ms: float = LATENCY_THRESHOLD_MS  # latency-spike trigger
+    amortize_requests: int = 32         # horizon the bottleneck gain pays over
+    redeploy_penalty_ms: float = 25.0   # per-moved-partition restart cost
+    min_gain_ratio: float = 1.0         # gain must exceed cost * ratio
+    cooldown_ms: float = POLL_INTERVAL_MS  # between voluntary migrations
+
+
+@dataclass
+class AdaptationEvent:
+    t_ms: float
+    kind: str                  # drift | migrate | skip
+    detail: str
+    data: dict = field(default_factory=dict)
+
+    def __str__(self) -> str:
+        return f"[{self.t_ms:9.1f}ms] {self.kind:<7} {self.detail}"
+
+
+@dataclass
+class MigrationDecision:
+    migrate: bool
+    reason: str
+    drifts: List[str]
+    current_bottleneck_ms: float
+    candidate_bottleneck_ms: float
+    predicted_gain_ms: float           # amortized over the request horizon
+    migration_cost_ms: float
+    plan: Optional[PartitionPlan] = None
+    assignment: Optional[List[str]] = None
+
+
+# --- dynamic scenario events -------------------------------------------------
+
+@dataclass(frozen=True)
+class ScenarioEvent:
+    at_ms: float
+    action: str                        # offline | recover | profile
+    node_id: str
+    changes: Optional[dict] = None     # NodeProfile overrides for "profile"
+
+
+def node_death(at_ms: float, node_id: str) -> ScenarioEvent:
+    return ScenarioEvent(at_ms, "offline", node_id)
+
+
+def node_recovery(at_ms: float, node_id: str) -> ScenarioEvent:
+    return ScenarioEvent(at_ms, "recover", node_id)
+
+
+def cpu_throttle(at_ms: float, node_id: str, cpu: float = 0.4,
+                 mem_mb: float = 512.0) -> ScenarioEvent:
+    """Throttle to the paper's low-resource profile (0.4 CPU / 512 MB)."""
+    return ScenarioEvent(at_ms, "profile", node_id, dict(cpu=cpu, mem_mb=mem_mb))
+
+
+def latency_spike(at_ms: float, node_id: str,
+                  net_latency_ms: float = 80.0) -> ScenarioEvent:
+    return ScenarioEvent(at_ms, "profile", node_id,
+                         dict(net_latency_ms=net_latency_ms))
+
+
+def apply_scenario_event(cluster: EdgeCluster, ev: ScenarioEvent) -> None:
+    if ev.action == "offline":
+        cluster.remove_node(ev.node_id)
+    elif ev.action == "recover":
+        cluster.restore_node(ev.node_id)
+    elif ev.action == "profile":
+        cluster.set_profile(ev.node_id, **(ev.changes or {}))
+    else:
+        raise ValueError(f"unknown scenario action: {ev.action}")
+
+
+# --- the controller ----------------------------------------------------------
+
+class AdaptationController:
+    """Closes the loop for one ``DistributedInference`` pipeline."""
+
+    def __init__(self, pipeline, config: Optional[AdaptationConfig] = None):
+        self.pipeline = pipeline
+        self.cfg = config or AdaptationConfig()
+        self.cluster: EdgeCluster = pipeline.cluster
+        self.monitor = pipeline.monitor
+        self.partitioner = pipeline.partitioner
+        self.deployer = pipeline.deployer
+        self.events: List[AdaptationEvent] = []
+        self.migrations = 0
+        self.decisions = 0
+        self._last_eval_ms = -math.inf
+        self._last_migration_ms = -math.inf
+        self._last_skipped_drifts: Optional[tuple] = None
+        self._planned_calibration = self.partitioner.calibration
+        self._planned_caps: Optional[Dict[str, float]] = None
+
+    # --- telemetry -> drift ---------------------------------------------------
+
+    def _detect_drift(self, stats: Dict[str, NodeStats]) -> List[str]:
+        cfg = self.cfg
+        drifts: List[str] = []
+        placement_nodes = set(self.pipeline.placement.values())
+        for nid in sorted(placement_nodes):
+            s = stats.get(nid)
+            if s is None or not s.online:
+                drifts.append(f"offline:{nid}")
+                continue
+            if s.stability < cfg.stability_threshold:
+                drifts.append(f"stability:{nid}")
+            if self.monitor.sustained_overload(nid, cfg.sustained_polls,
+                                               cfg.load_threshold):
+                drifts.append(f"overload:{nid}")
+            if s.net_latency_ms > cfg.latency_threshold_ms:
+                drifts.append(f"latency:{nid}")
+        if self.partitioner.calibration_drift(
+                self._planned_calibration) > cfg.calibration_band:
+            drifts.append("miscalibration")
+        if self._planned_caps is not None:
+            for nid, s in stats.items():
+                base = self._planned_caps.get(nid, 0.0)
+                cap = s.capability
+                if base <= 0.0:
+                    if cap > 0.0 and nid not in placement_nodes:
+                        drifts.append(f"capacity-join:{nid}")
+                elif abs(cap - base) / base > cfg.capacity_band:
+                    drifts.append(f"capacity:{nid}")
+        return drifts
+
+    # --- prediction -----------------------------------------------------------
+
+    def _predicted_bottleneck_ms(self, partitions: List[Partition],
+                                 assignment: Dict[int, str]) -> float:
+        """Steady-state period: slowest node-serialized stage set. Uses the
+        partitioner's *current* calibration for both plans so comparisons are
+        apples-to-apples even when the plan was built at another scale."""
+        graph = self.partitioner.graph
+        calib = self.partitioner.calibration
+        per_node: Dict[str, float] = defaultdict(float)
+        for part in partitions:
+            node = self.cluster.nodes[assignment[part.index]]
+            if not node.online:
+                return math.inf
+            cost = partition_cost(graph, part.lo, part.hi) * calib
+            cost *= self.pipeline.batch / self.deployer.speedup
+            ws = working_set_bytes(graph, part.lo, part.hi, self.pipeline.batch)
+            per_node[node.node_id] += execution_ms(cost, node.profile, ws)
+        return max(per_node.values()) if per_node else math.inf
+
+    def _predicted_migration_cost_ms(self, plan: PartitionPlan,
+                                     assignment: List[str]) -> float:
+        """Params transfer for every partition not already resident on its
+        target plus a redeploy penalty — computed by the deployer itself, so
+        prediction and the later ``migrate_plan`` charge cannot diverge."""
+        return self.deployer.predicted_migration_ms(
+            plan, assignment, self.cfg.redeploy_penalty_ms)
+
+    # --- decision -------------------------------------------------------------
+
+    def _candidate(self, stats: Dict[str, NodeStats]):
+        """Best (plan, stage->node assignment) for the live capabilities.
+
+        Stage order is fixed (contiguous pipeline) but node order is not —
+        e.g. a heavyweight LM head at the END of the layer list must not land
+        on the weakest node just because stages were dealt out by capability
+        rank. For small clusters, solve boundaries + assignment jointly by
+        scoring every node permutation with the real execution model; larger
+        clusters fall back to capability order.
+        """
+        live = sorted((s for s in stats.values() if s.capability > 0.0),
+                      key=lambda s: -s.capability)
+        if not live:
+            return None, None
+        n = min(len(live), len(self.partitioner.graph.layers))
+        live = live[:n]
+        orders = (itertools.permutations(live) if n <= 5 else [tuple(live)])
+        best = None
+        for order in orders:
+            plan = self.partitioner.plan(
+                n, weights=[s.capability for s in order], method="optimal")
+            assignment = [s.node_id for s in order]
+            bott = self._predicted_bottleneck_ms(
+                plan.partitions, dict(enumerate(assignment)))
+            if best is None or bott < best[0]:
+                best = (bott, plan, assignment)
+        return best[1], best[2]
+
+    def evaluate(self, force_poll: bool = False) -> Optional[MigrationDecision]:
+        """Run one control-loop iteration; returns the decision if drift was
+        evaluated, else None. Does not apply the migration."""
+        if force_poll:
+            self.monitor.poll(force=True)
+        else:
+            self.monitor.poll()
+        if self.monitor.last_poll_ms <= self._last_eval_ms and not force_poll:
+            return None
+        self._last_eval_ms = self.monitor.last_poll_ms
+        stats = self.monitor.snapshots
+        if self._planned_caps is None:   # first observation anchors the plan
+            self._planned_caps = {nid: s.capability for nid, s in stats.items()}
+        drifts = self._detect_drift(stats)
+        if not drifts:
+            self._last_skipped_drifts = None
+            return None
+        # Threshold-style drifts (latency/stability/overload) re-fire with
+        # identical labels every poll once judged not actionable — silence
+        # exact repeats. Baseline-anchored drifts (capacity/miscalibration/
+        # offline/join) only re-appear when the signal moved again relative to
+        # the re-anchored baseline, so they always warrant a fresh evaluation
+        # even under the same label.
+        persistent = ("stability:", "overload:", "latency:")
+        if (tuple(drifts) == self._last_skipped_drifts
+                and all(d.startswith(persistent) for d in drifts)):
+            return None
+        now = self.cluster.clock.now_ms
+        self.decisions += 1
+        for d in drifts:
+            self._log(now, "drift", d)
+
+        service_down = any(d.startswith("offline:") for d in drifts)
+        if (not service_down
+                and now - self._last_migration_ms < self.cfg.cooldown_ms):
+            return MigrationDecision(False, "cooldown", drifts,
+                                     math.nan, math.nan, 0.0, 0.0)
+
+        plan, assignment = self._candidate(stats)
+        if plan is None:
+            self._log(now, "skip", "no online capacity for a candidate plan")
+            return MigrationDecision(False, "no-capacity", drifts,
+                                     math.inf, math.inf, 0.0, 0.0)
+
+        cur = self._predicted_bottleneck_ms(
+            self.pipeline.plan.partitions, self.pipeline.placement)
+        cand = self._predicted_bottleneck_ms(
+            plan.partitions, {i: nid for i, nid in enumerate(assignment)})
+        cost = self._predicted_migration_cost_ms(plan, assignment)
+        gain = ((cur - cand) * self.cfg.amortize_requests
+                if math.isfinite(cur) else math.inf)
+        migrate = service_down or gain > cost * self.cfg.min_gain_ratio
+        reason = ("service-down" if service_down else
+                  "gain-exceeds-cost" if migrate else "gain-below-cost")
+        return MigrationDecision(migrate, reason, drifts, cur, cand,
+                                 gain, cost, plan, assignment)
+
+    def apply(self, decision: MigrationDecision) -> None:
+        """Live migration: deployer switches plans; the pipeline routes new
+        requests to the new placement while in-flight ones drain."""
+        assert decision.migrate and decision.plan is not None
+        placed, transfer_cost = self.deployer.migrate_plan(
+            decision.plan, decision.assignment)
+        self.pipeline.plan = decision.plan
+        self.pipeline.placement = placed
+        now = self.cluster.clock.now_ms
+        self.migrations += 1
+        self._last_migration_ms = now
+        self._planned_calibration = self.partitioner.calibration
+        self._planned_caps = {nid: s.capability
+                              for nid, s in self.monitor.snapshots.items()}
+        self._log(now, "migrate",
+                  f"{len(decision.plan.partitions)}-way -> "
+                  f"{assignment_str(placed)} ({decision.reason})",
+                  data=dict(
+                      bottleneck_before_ms=round(decision.current_bottleneck_ms, 2)
+                      if math.isfinite(decision.current_bottleneck_ms) else "inf",
+                      bottleneck_after_ms=round(decision.candidate_bottleneck_ms, 2),
+                      predicted_gain_ms=round(decision.predicted_gain_ms, 2)
+                      if math.isfinite(decision.predicted_gain_ms) else "inf",
+                      migration_cost_ms=round(decision.migration_cost_ms, 2),
+                      transfer_charged_ms=round(transfer_cost, 2)))
+
+    def maybe_adapt(self, force_poll: bool = False) -> Optional[MigrationDecision]:
+        decision = self.evaluate(force_poll=force_poll)
+        if decision is None:
+            return None
+        if decision.migrate:
+            self.apply(decision)
+            self._last_skipped_drifts = None
+        elif decision.reason != "cooldown":
+            self._last_skipped_drifts = tuple(decision.drifts)
+            if decision.reason == "gain-below-cost":   # no-capacity logs itself
+                self._log(self.cluster.clock.now_ms, "skip",
+                          f"{decision.reason}: gain "
+                          f"{decision.predicted_gain_ms:.1f}ms <= cost "
+                          f"{decision.migration_cost_ms:.1f}ms",
+                          data=dict(drifts=decision.drifts))
+            # the drift was considered and judged not worth acting on; anchor
+            # the baseline so the same signal doesn't re-fire every poll
+            self._planned_calibration = self.partitioner.calibration
+            self._planned_caps = {nid: s.capability
+                                  for nid, s in self.monitor.snapshots.items()}
+        return decision
+
+    # --- reporting ------------------------------------------------------------
+
+    def _log(self, t_ms: float, kind: str, detail: str, data: dict = None) -> None:
+        self.events.append(AdaptationEvent(t_ms, kind, detail, data or {}))
+
+    def summary(self) -> dict:
+        return dict(
+            migrations=self.migrations,
+            decisions=self.decisions,
+            events=[str(e) for e in self.events],
+        )
+
+
+def assignment_str(placement: Dict[int, str]) -> str:
+    return "{" + ", ".join(f"{i}:{placement[i]}" for i in sorted(placement)) + "}"

@@ -27,8 +27,12 @@ class ResultCache:
         self.misses = 0
         self.bytes_saved = 0.0
 
-    def key(self, model: str, part_index: int, input_digest: str) -> Tuple:
-        return (model, part_index, input_digest)
+    def key(self, model: str, part_range: Tuple[int, int],
+            input_digest: str) -> Tuple:
+        """Keyed by the partition's *layer range*, not its index: adaptive
+        re-partitioning changes boundaries mid-run, and an entry for layers
+        [0,108) must not hit for a post-migration partition covering [0,70)."""
+        return (model, part_range, input_digest)
 
     def get(self, key: Tuple) -> Optional[Any]:
         if key in self._store:

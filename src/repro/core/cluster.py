@@ -12,6 +12,7 @@ Real numerics (JAX forwards) are run by the pipeline; *time* is charged via
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -121,6 +122,23 @@ class EdgeCluster:
         node = self.nodes[node_id]
         node.online = False
         self.events.append(f"[{self.clock.now_ms:9.1f}ms] offline {node_id}")
+
+    def restore_node(self, node_id: str) -> EdgeNode:
+        """Bring a previously-offline node back (the paper's recovery event)."""
+        node = self.nodes[node_id]
+        node.online = True
+        node.busy_until_ms = max(node.busy_until_ms, self.clock.now_ms)
+        self.events.append(f"[{self.clock.now_ms:9.1f}ms] recover {node_id}")
+        return node
+
+    def set_profile(self, node_id: str, **changes) -> EdgeNode:
+        """Change a node's resource profile in place (cgroup re-limit: CPU
+        throttle, memory squeeze, or a network-latency spike)."""
+        node = self.nodes[node_id]
+        node.profile = dataclasses.replace(node.profile, **changes)
+        desc = ", ".join(f"{k}={v}" for k, v in changes.items())
+        self.events.append(f"[{self.clock.now_ms:9.1f}ms] profile {node_id} ({desc})")
+        return node
 
     def online_nodes(self) -> List[EdgeNode]:
         return [n for n in self.nodes.values() if n.online]

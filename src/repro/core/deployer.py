@@ -13,6 +13,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.cluster import EdgeCluster
+from repro.core.cost_model import transfer_ms
 from repro.core.monitor import ResourceMonitor
 from repro.core.partitioner import Partition, PartitionPlan
 from repro.core.scheduler import TaskRequirements, TaskScheduler
@@ -94,10 +95,83 @@ class ModelDeployer:
     def assignment(self) -> Dict[int, str]:
         return {i: d.node_id for i, d in self.deployments.items() if d.active}
 
+    # --- live migration (Adaptation Controller) ------------------------------
+
+    def nonresident_partitions(self, plan: PartitionPlan,
+                               assignment: List[str]) -> List[Partition]:
+        """Partitions of ``plan`` that would have to be shipped: their layer
+        range is not already resident on the assigned node. Shared by the
+        actual migration below and the controller's cost prediction, so the
+        economics the migrate/skip decision is based on match what a
+        migration then charges, by construction."""
+        resident = {(d.partition.lo, d.partition.hi, d.node_id)
+                    for d in self.deployments.values() if d.active}
+        return [p for p in plan.partitions
+                if (p.lo, p.hi, assignment[p.index]) not in resident]
+
+    def predicted_migration_ms(self, plan: PartitionPlan, assignment: List[str],
+                               penalty_ms: float = 0.0) -> float:
+        """Transfer time a migrate_plan() call would charge, plus an optional
+        per-moved-partition redeploy penalty."""
+        shrink = OPT_LEVELS[self.opt_level][1]
+        cost = 0.0
+        for part in self.nonresident_partitions(plan, assignment):
+            profile = self.cluster.nodes[assignment[part.index]].profile
+            cost += transfer_ms(part.params_bytes * shrink, profile) + penalty_ms
+        return cost
+
+    def migrate_plan(self, plan: PartitionPlan,
+                     assignment: List[str]) -> "tuple[Dict[int, str], float]":
+        """Switch to ``plan`` with an explicit stage->node assignment.
+
+        Partitions whose layer range is already resident on their target node
+        are reused without re-transfer; everything else is undeployed and
+        shipped (params_bytes * dtype shrink) to its new home. Returns the new
+        placement and the total transfer time charged — the migration cost the
+        controller weighed against the predicted bottleneck gain.
+        """
+        shrink = OPT_LEVELS[self.opt_level][1]
+        to_ship = self.nonresident_partitions(plan, assignment)
+        ship_idx = {p.index for p in to_ship}
+        new_deps: Dict[int, Deployment] = {}
+        placed: Dict[int, str] = {}
+        reused_keys = set()
+        for part in plan.partitions:
+            node_id = assignment[part.index]
+            placed[part.index] = node_id
+            if part.index not in ship_idx:
+                new_deps[part.index] = Deployment(part, node_id, self.opt_level, 0.0)
+                reused_keys.add((part.lo, part.hi, node_id))
+        for d in self.deployments.values():   # old partitions not carried over
+            key = (d.partition.lo, d.partition.hi, d.node_id)
+            if d.active and key not in reused_keys:
+                node = self.cluster.nodes[d.node_id]
+                node.mem_used_bytes = max(
+                    0.0, node.mem_used_bytes - d.partition.params_bytes * shrink)
+                d.active = False
+        cost_ms = 0.0
+        now = self.cluster.clock.now_ms
+        for part in to_ship:
+            node = self.cluster.nodes[placed[part.index]]
+            t = node.receive(part.params_bytes * shrink)
+            node.mem_used_bytes += part.params_bytes * shrink
+            # the shipment occupies the target's downlink/runtime: its first
+            # new-plan request queues behind it (migration downtime is paid
+            # in simulated time, not just in the controller's economics)
+            node.busy_until_ms = max(node.busy_until_ms, now) + t
+            new_deps[part.index] = Deployment(part, placed[part.index],
+                                              self.opt_level, t)
+            cost_ms += t
+            self.redeploy_events.append(
+                f"partition {part.index} -> {placed[part.index]} (migrate)")
+        self.deployments = new_deps
+        return placed, cost_ms
+
     # --- failure recovery / elasticity --------------------------------------
 
     def handle_node_offline(self, node_id: str) -> List[int]:
         """Redeploy partitions that lived on a now-offline node."""
+        self.monitor.poll(force=True)   # don't route on a stale snapshot
         moved = []
         for i, d in list(self.deployments.items()):
             if d.active and d.node_id == node_id:
@@ -111,6 +185,8 @@ class ModelDeployer:
                 shrink = OPT_LEVELS[self.opt_level][1]
                 t = node.receive(d.partition.params_bytes * shrink)
                 node.mem_used_bytes += d.partition.params_bytes * shrink
+                node.busy_until_ms = max(node.busy_until_ms,
+                                         self.cluster.clock.now_ms) + t
                 self.deployments[i] = Deployment(d.partition, new_node,
                                                  self.opt_level, t)
                 moved.append(i)

@@ -19,6 +19,10 @@ from repro.core.cluster import EdgeCluster, EdgeNode
 POLL_INTERVAL_MS = 1000.0          # 1 Hz, as in the paper
 MONITOR_COST_MS_PER_POLL = 0.08    # simulated cost of one stats query
 HISTORY_WINDOW = 64
+#: single source for the paper's 50 ms network-latency threshold: the NSA
+#: skip rule (scheduler), the capability discount (below), and the adaptation
+#: drift trigger all derive from this constant.
+LATENCY_THRESHOLD_MS = 50.0
 
 
 @dataclass
@@ -43,6 +47,18 @@ class NodeStats:
     @property
     def mem_avail_mb(self) -> float:
         return max(0.0, self.mem_limit_mb - self.mem_used_mb)
+
+    @property
+    def capability(self) -> float:
+        """Live capability weight for re-partitioning: provisioned CPU scaled
+        by headroom, stability, and a high-latency discount. Offline -> 0."""
+        if not self.online:
+            return 0.0
+        cap = max(self.cpu * (1.0 - self.current_load), 0.1 * self.cpu)
+        cap *= max(self.stability, 0.25)
+        if self.net_latency_ms > LATENCY_THRESHOLD_MS:
+            cap *= LATENCY_THRESHOLD_MS / self.net_latency_ms
+        return cap
 
 
 class ResourceMonitor:
@@ -105,6 +121,15 @@ class ResourceMonitor:
     def online_stats(self) -> List[NodeStats]:
         self.poll()
         return [s for s in self.snapshots.values() if s.online]
+
+    def sustained_overload(self, node_id: str, polls: int,
+                           threshold: float) -> bool:
+        """True when the node's last ``polls`` snapshots all exceeded the load
+        threshold — the Adaptation Controller's hotspot-drift trigger."""
+        h = self.history.get(node_id, [])
+        if len(h) < polls:
+            return False
+        return all(s.current_load > threshold for s in h[-polls:])
 
     def cpu_overhead_pct(self) -> float:
         """Monitor CPU overhead relative to elapsed simulated time."""

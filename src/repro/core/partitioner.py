@@ -93,6 +93,14 @@ class ModelPartitioner:
     def calibration(self) -> float:
         return self._calibration
 
+    def calibration_drift(self, reference: float = 1.0) -> float:
+        """Relative miscalibration vs. the scale the current plan was built
+        with; the Adaptation Controller re-plans beyond a configurable band."""
+        return abs(self._calibration - reference) / max(reference, 1e-9)
+
+    def reset_calibration(self) -> None:
+        self._calibration = 1.0
+
     # --- B3 -----------------------------------------------------------------
 
     def boundaries(self, num_partitions: int,

@@ -21,6 +21,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.adaptation import (AdaptationConfig, AdaptationController,
+                                   ScenarioEvent, apply_scenario_event)
 from repro.core.cache import ResultCache, digest
 from repro.core.cluster import EdgeCluster
 from repro.core.cost_model import transfer_ms
@@ -56,6 +58,7 @@ class RunReport:
     mem_used_mb: float
     cpu_pct: float
     cache_stats: Optional[dict] = None
+    adaptation: Optional[dict] = None   # AdaptationController.summary()
 
     @property
     def avg_latency_ms(self) -> float:
@@ -113,7 +116,8 @@ class DistributedInference:
                  refine: bool = False, method: str = "greedy",
                  executor: Optional[Callable] = None,
                  assignment: Optional[List[str]] = None,
-                 batch: int = 1):
+                 batch: int = 1, adaptive: bool = False,
+                 adaptation: Optional[AdaptationConfig] = None):
         self.cluster = cluster
         self.partitioner = partitioner
         self.monitor = ResourceMonitor(cluster)
@@ -126,6 +130,9 @@ class DistributedInference:
         self.executor = executor
         self.batch = batch
         self.placement = self.deployer.deploy_plan(self.plan, assignment)
+        self.controller: Optional[AdaptationController] = (
+            AdaptationController(self, adaptation) if adaptive or adaptation
+            else None)
         self._verified = executor is None
 
     # --- real-numerics verification -----------------------------------------
@@ -163,9 +170,18 @@ class DistributedInference:
 
     # --- request processing ----------------------------------------------------
 
+    def _repair_placement(self) -> None:
+        """Non-adaptive fallback when a placement node dies: redeploy its
+        partitions (boundaries fixed — the paper's §V limitation)."""
+        for nid in set(self.placement.values()):
+            if not self.cluster.nodes[nid].online:
+                self.deployer.handle_node_offline(nid)
+        self.placement = self.deployer.assignment()
+
     def run(self, num_requests: int, name: str = "amp4ec",
             repeat_rate: float = 0.0, seed: int = 0,
-            concurrency: int = 32) -> RunReport:
+            concurrency: int = 32,
+            scenario: Optional[Sequence[ScenarioEvent]] = None) -> RunReport:
         """Process a closed-loop request stream through the partition pipeline.
 
         ``concurrency``: number of requests in flight (the paper's "batches of
@@ -173,7 +189,11 @@ class DistributedInference:
         finishes, so reported latency is service latency, not unbounded queue
         wait. ``repeat_rate``: fraction of requests repeating an earlier input
         pattern (drives the +Cache configuration, mirroring the paper's
-        identical request batches).
+        identical request batches). ``scenario``: timed dynamic events (node
+        death / recovery / throttle / latency spike) applied at submit
+        boundaries; with an AdaptationController attached the closed loop
+        re-partitions in response, otherwise only dead placements are repaired
+        in place.
         """
         rng = np.random.default_rng(seed)
         clock = self.cluster.clock
@@ -182,15 +202,32 @@ class DistributedInference:
         total_net_bytes = 0.0
         sched_oh = 0.0
         finishes: List[float] = []
+        pending_events = sorted(scenario or [], key=lambda e: e.at_ms)
 
         for r in range(num_requests):
             submit = clock.now_ms
             if r >= concurrency:
                 submit = max(submit, finishes[r - concurrency])
+            clock.now_ms = max(clock.now_ms, submit)
+            while pending_events and pending_events[0].at_ms <= submit:
+                apply_scenario_event(self.cluster, pending_events.pop(0))
             # per-request admission decision by the NSA (10 ms, Table I)
             stats = self.monitor.online_stats()
             self.scheduler.select_node(stats)  # admission / routing decision
             sched_oh += SCHEDULING_OVERHEAD_MS
+            if self.controller is not None:
+                self.controller.maybe_adapt()   # acts only on fresh polls
+            # new requests route to the current plan; in-flight requests were
+            # already charged against the plan they were submitted under
+            if any(not self.cluster.nodes[nid].online
+                   for nid in self.placement.values()):
+                if self.controller is not None:
+                    # a failed dispatch is an immediate drift signal — don't
+                    # wait out the poll interval
+                    self.controller.maybe_adapt(force_poll=True)
+                else:
+                    self._repair_placement()
+            plan, placement = self.plan, self.placement
             t = submit + SCHEDULING_OVERHEAD_MS
 
             if repeat_rate > 0 and rng.random() < repeat_rate:
@@ -201,11 +238,11 @@ class DistributedInference:
             comm = 0.0
             hits = 0
             service = SCHEDULING_OVERHEAD_MS
-            for part in self.plan.partitions:
-                node = self.cluster.nodes[self.placement[part.index]]
+            for part in plan.partitions:
+                node = self.cluster.nodes[placement[part.index]]
                 key = None
                 if self.cache is not None:
-                    key = self.cache.key(self.plan.graph_name, part.index, sig)
+                    key = self.cache.key(plan.graph_name, (part.lo, part.hi), sig)
                     if self.cache.get(key) is not None:
                         hits += 1
                         self.cache.credit_saved(part.out_bytes)
@@ -217,8 +254,8 @@ class DistributedInference:
                 self.scheduler.task_completed(node.node_id, rec.exec_ms)
                 service += rec.exec_ms
                 t = rec.end_ms
-                if part.index < len(self.plan.partitions) - 1:
-                    nxt = self.cluster.nodes[self.placement[part.index + 1]]
+                if part.index < len(plan.partitions) - 1:
+                    nxt = self.cluster.nodes[placement[part.index + 1]]
                     tm = transfer_ms(part.out_bytes * self.batch, nxt.profile)
                     node.send(part.out_bytes * self.batch)
                     nxt.net_rx_bytes += part.out_bytes * self.batch
@@ -229,10 +266,15 @@ class DistributedInference:
                 if self.cache is not None:
                     self.cache.put(key, True)
             reqs.append(RequestMetrics(r, submit, t, comm, hits,
-                                       len(self.plan.partitions), service))
+                                       len(plan.partitions), service))
             finishes.append(t)
 
         clock.now_ms = max(clock.now_ms, max(r.finish_ms for r in reqs))
+        # scenario events the request stream never reached still take effect
+        # (e.g. a recovery scheduled past the last submit) so the cluster is
+        # not silently left in a partial scenario state for later runs
+        for ev in pending_events:
+            apply_scenario_event(self.cluster, ev)
         stats = self.monitor.poll(force=True)
         online = [s for s in stats.values() if s.online]
         mem_mb = sum(s.mem_used_mb for s in online)
@@ -244,6 +286,8 @@ class DistributedInference:
             monitor_overhead_pct=self.monitor.cpu_overhead_pct(),
             stability=stability, mem_used_mb=mem_mb, cpu_pct=cpu_pct,
             cache_stats=self.cache.stats() if self.cache else None,
+            adaptation=(self.controller.summary()
+                        if self.controller is not None else None),
         )
 
 

@@ -17,11 +17,11 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.monitor import NodeStats
+from repro.core.monitor import LATENCY_THRESHOLD_MS, NodeStats
 
 DEFAULT_WEIGHTS = dict(resource=0.2, load=0.2, perf=0.1, balance=0.5)
 LOAD_SKIP_THRESHOLD = 0.8
-LATENCY_SKIP_MS = 50.0
+LATENCY_SKIP_MS = LATENCY_THRESHOLD_MS
 SCHEDULING_OVERHEAD_MS = 10.0      # paper Table I: 10 ms per decision
 HISTORY_LEN = 32
 
@@ -54,6 +54,7 @@ class TaskScheduler:
         self.latency_threshold_ms = latency_threshold_ms
         self.exec_history: Dict[str, List[float]] = {}
         self.task_counts: Dict[str, int] = {}
+        self.skip_counts: Dict[str, int] = {}
         self.decisions = 0
         self.overhead_ms = 0.0
 
@@ -118,7 +119,9 @@ class TaskScheduler:
         self.overhead_ms += SCHEDULING_OVERHEAD_MS
         best, best_score = None, 0.0
         for s in self.score_nodes(nodes, req):
-            if s.skipped is None and s.total > best_score:
+            if s.skipped is not None:
+                self.skip_counts[s.skipped] = self.skip_counts.get(s.skipped, 0) + 1
+            elif s.total > best_score:
                 best, best_score = s.node_id, s.total
         if best is not None:
             self.task_counts[best] = self.task_counts.get(best, 0) + 1
@@ -142,6 +145,7 @@ class TaskScheduler:
             avg_overhead_ms=(self.overhead_ms / self.decisions
                              if self.decisions else 0.0),
             queue_lengths={k: v for k, v in self.task_counts.items()},
+            skip_counts=dict(self.skip_counts),
             avg_exec_ms={k: sum(v) / len(v)
                          for k, v in self.exec_history.items() if v},
         )

@@ -5,12 +5,67 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import dataclasses
+import functools
+import random
 
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_config
+
+# --- property-testing shim ---------------------------------------------------
+# The container may lack `hypothesis`; the suite's property tests then fall
+# back to a deterministic random sampler with the same decorator surface
+# (given / settings / strategies). Test modules import these via
+# `from conftest import given, settings, st`.
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(r):
+                k = r.randint(min_size, max_size)
+                return [elements.sample(r) for _ in range(k)]
+            return _Strategy(sample)
+
+    st = _Strategies()
+
+    def settings(max_examples=25, deadline=None, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            n_examples = getattr(fn, "_prop_max_examples", 25)
+
+            @functools.wraps(fn)
+            def wrapper():
+                rnd = random.Random(fn.__qualname__)
+                for _ in range(n_examples):
+                    fn(**{k: s.sample(rnd)
+                          for k, s in strategy_kwargs.items()})
+
+            del wrapper.__wrapped__  # keep pytest from seeing fn's params
+            return wrapper
+        return deco
 
 
 @pytest.fixture(scope="session")

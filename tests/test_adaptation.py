@@ -1,0 +1,181 @@
+"""Closed-loop adaptation: drift detection, migration economics, recovery."""
+
+import pytest
+
+from repro.core.adaptation import (AdaptationConfig, AdaptationController,
+                                   apply_scenario_event, cpu_throttle,
+                                   latency_spike, node_death, node_recovery)
+from repro.core.cluster import make_paper_cluster
+from repro.core.monitor import POLL_INTERVAL_MS
+from repro.core.partitioner import ModelPartitioner
+from repro.core.pipeline import DistributedInference
+from repro.models.graph import mobilenetv2_graph
+
+CONCURRENCY = 4   # closed-loop window small enough that sim time advances
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return mobilenetv2_graph()
+
+
+def _adaptive_pipeline(graph, **kw):
+    return DistributedInference(make_paper_cluster(), ModelPartitioner(graph),
+                                adaptive=True, **kw)
+
+
+# --- node death --------------------------------------------------------------
+
+def test_node_death_triggers_exactly_one_repartition(graph):
+    d = _adaptive_pipeline(graph)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    t0 = d.cluster.clock.now_ms
+    victim = d.placement[max(d.placement)]
+    death_at = t0 + 2500.0    # mid-run, once the pipeline is in steady state
+    d.run(30, name="fault", concurrency=CONCURRENCY,
+          scenario=[node_death(death_at, victim)])
+    migrations = [e for e in d.controller.events if e.kind == "migrate"]
+    assert len(migrations) == 1
+    # reaction inside one monitor poll interval of the fault
+    assert 0.0 <= migrations[0].t_ms - death_at <= POLL_INTERVAL_MS
+    # the dead node no longer serves any partition; survivors cover the model
+    assert victim not in d.placement.values()
+    assert sum(p.num_layers for p in d.plan.partitions) == len(graph.layers)
+
+
+def test_post_migration_latency_recovers_within_15pct(graph):
+    d = _adaptive_pipeline(graph)
+    warm = d.run(30, name="warm", concurrency=CONCURRENCY)
+    t0 = d.cluster.clock.now_ms
+    victim = d.placement[max(d.placement)]
+    d.run(30, name="fault", concurrency=CONCURRENCY,
+          scenario=[node_death(t0 + 50.0, victim)])
+    assert d.controller.migrations == 1
+    post = d.run(30, name="post", concurrency=CONCURRENCY)
+    assert post.steady_latency_ms <= warm.steady_latency_ms * 1.15
+
+
+def test_adaptation_beats_degraded_fixed_boundary_plan(graph):
+    def fault_run(adaptive):
+        d = DistributedInference(make_paper_cluster(), ModelPartitioner(graph),
+                                 adaptive=adaptive)
+        d.run(12, name="warm", concurrency=CONCURRENCY)
+        t0 = d.cluster.clock.now_ms
+        victim = d.placement[max(d.placement)]
+        return d.run(30, name="fault", concurrency=CONCURRENCY,
+                     scenario=[node_death(t0 + 50.0, victim)])
+    adaptive = fault_run(True)
+    degraded = fault_run(False)
+    assert adaptive.avg_latency_ms < degraded.avg_latency_ms
+    assert adaptive.steady_latency_ms < degraded.steady_latency_ms
+
+
+# --- migration economics -----------------------------------------------------
+
+def test_migration_skipped_when_gain_below_cost(graph):
+    cfg = AdaptationConfig(redeploy_penalty_ms=1e7)   # migration never pays
+    d = _adaptive_pipeline(graph, adaptation=cfg)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    before = dict(d.placement)
+    d.cluster.set_profile("edge-0-high", cpu=0.4, mem_mb=512.0)
+    decision = d.controller.maybe_adapt(force_poll=True)
+    assert decision is not None and not decision.migrate
+    assert decision.reason == "gain-below-cost"
+    assert decision.predicted_gain_ms <= decision.migration_cost_ms
+    assert d.controller.migrations == 0
+    assert d.placement == before
+    assert any(e.kind == "skip" for e in d.controller.events)
+
+
+def test_cpu_throttle_migrates_under_default_economics(graph):
+    d = _adaptive_pipeline(graph)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    d.cluster.set_profile("edge-0-high", cpu=0.4, mem_mb=512.0)
+    decision = d.controller.maybe_adapt(force_poll=True)
+    assert decision is not None and decision.migrate
+    assert decision.predicted_gain_ms > decision.migration_cost_ms
+    assert d.controller.migrations == 1
+
+
+def test_same_persistent_drift_not_relogged(graph):
+    cfg = AdaptationConfig(redeploy_penalty_ms=1e7)
+    d = _adaptive_pipeline(graph, adaptation=cfg)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    d.cluster.set_profile("edge-0-high", cpu=0.4, mem_mb=512.0)
+    first = d.controller.maybe_adapt(force_poll=True)
+    assert first is not None and not first.migrate
+    n_events = len(d.controller.events)
+    assert d.controller.maybe_adapt(force_poll=True) is None
+    assert len(d.controller.events) == n_events
+
+
+# --- event log / reporting ---------------------------------------------------
+
+def test_run_report_exposes_adaptation_events(graph):
+    d = _adaptive_pipeline(graph)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    t0 = d.cluster.clock.now_ms
+    rep = d.run(30, name="fault", concurrency=CONCURRENCY,
+                scenario=[node_death(t0 + 50.0, d.placement[max(d.placement)])])
+    assert rep.adaptation is not None
+    assert rep.adaptation["migrations"] == 1
+    assert any("migrate" in line for line in rep.adaptation["events"])
+    assert any("offline" in line for line in rep.adaptation["events"])
+
+
+def test_non_adaptive_report_has_no_adaptation_section(graph):
+    d = DistributedInference(make_paper_cluster(), ModelPartitioner(graph))
+    rep = d.run(5, name="plain")
+    assert rep.adaptation is None
+
+
+# --- live migration mechanics ------------------------------------------------
+
+def test_migrate_plan_reuses_resident_partitions(graph):
+    nodes = ["edge-0-high", "edge-1-medium", "edge-2-low"]
+    d = DistributedInference(make_paper_cluster(), ModelPartitioner(graph),
+                             num_partitions=3, assignment=nodes)
+    placed, cost = d.deployer.migrate_plan(d.plan, nodes)
+    assert placed == {0: nodes[0], 1: nodes[1], 2: nodes[2]}
+    assert cost == 0.0    # every partition already resident on its target
+
+
+def test_migrate_plan_frees_memory_on_moved_partitions(graph):
+    nodes = ["edge-0-high", "edge-1-medium", "edge-2-low"]
+    d = DistributedInference(make_paper_cluster(), ModelPartitioner(graph),
+                             num_partitions=3, assignment=nodes)
+    mem_before = {n: d.cluster.nodes[n].mem_used_bytes for n in nodes}
+    rotated = nodes[1:] + nodes[:1]
+    placed, cost = d.deployer.migrate_plan(d.plan, rotated)
+    assert cost > 0.0
+    # total deployed bytes conserved: frees on old homes, charges on new
+    total_after = sum(d.cluster.nodes[n].mem_used_bytes for n in nodes)
+    assert total_after == pytest.approx(sum(mem_before.values()))
+
+
+# --- scenario events ---------------------------------------------------------
+
+def test_scenario_event_helpers_mutate_cluster():
+    c = make_paper_cluster()
+    apply_scenario_event(c, cpu_throttle(0.0, "edge-0-high"))
+    assert c.nodes["edge-0-high"].profile.cpu == 0.4
+    assert c.nodes["edge-0-high"].profile.mem_mb == 512.0
+    apply_scenario_event(c, latency_spike(0.0, "edge-1-medium", 120.0))
+    assert c.nodes["edge-1-medium"].profile.net_latency_ms == 120.0
+    apply_scenario_event(c, node_death(0.0, "edge-2-low"))
+    assert not c.nodes["edge-2-low"].online
+    apply_scenario_event(c, node_recovery(0.0, "edge-2-low"))
+    assert c.nodes["edge-2-low"].online
+    assert len(c.events) >= 7   # 3 joins + 4 scenario mutations logged
+
+
+def test_node_recovery_triggers_scale_back_up(graph):
+    d = _adaptive_pipeline(graph)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    t0 = d.cluster.clock.now_ms
+    victim = d.placement[max(d.placement)]
+    d.run(60, name="fault+recover", concurrency=CONCURRENCY,
+          scenario=[node_death(t0 + 50.0, victim),
+                    node_recovery(t0 + 4000.0, victim)])
+    assert d.controller.migrations == 2
+    assert victim in d.placement.values()   # recovered node serves again

@@ -3,7 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st
 
 from repro.core.partitioner import ModelPartitioner
 from repro.models.graph import LayerSpec, ModelGraph, mobilenetv2_graph, transformer_graph
@@ -137,6 +137,52 @@ def test_transformer_graph_partitionable(arch):
     assert sum(plan.sizes) == len(g.layers)
     assert plan.imbalance < 3.0
     assert g.total_flops > 0
+
+
+# --- degenerate cases --------------------------------------------------------
+
+def test_boundaries_empty_tail_when_front_layers_absorb_targets():
+    """One dominant layer swallows every target: the greedy pass closes the
+    remaining partitions empty at the tail, but coverage is preserved."""
+    p = ModelPartitioner(_graph_from_costs([100.0, 1.0, 1.0, 1.0]))
+    cuts = p.boundaries(4)
+    assert cuts[0] == 0 and cuts[-1] == 4 and len(cuts) == 5
+    assert all(a <= b for a, b in zip(cuts, cuts[1:]))
+    plan = p.plan(4)
+    assert sum(plan.sizes) == 4
+    assert 0 in plan.sizes                 # at least one empty tail partition
+    assert sum(plan.costs) == pytest.approx(103.0)
+
+
+def test_refine_weighted_never_worse_than_input():
+    g = mobilenetv2_graph()
+    p = ModelPartitioner(g)
+    costs = [l.cost for l in g.layers]
+    weights = [1.0, 0.6, 0.4]
+    cuts = p.boundaries(3, weights=weights)
+    refined = p.refine(cuts, weights=weights)
+
+    def bottleneck(c):
+        return max(sum(costs[c[i]:c[i + 1]]) / weights[i] for i in range(3))
+
+    assert bottleneck(refined) <= bottleneck(cuts) + 1e-6
+
+
+def test_optimal_not_worse_than_greedy_on_mobilenetv2():
+    g = mobilenetv2_graph()
+    p = ModelPartitioner(g)
+    costs = [l.cost for l in g.layers]
+    for n in (2, 3, 4):
+        for weights in (None, [1.0] * n, list(range(1, n + 1))):
+            greedy = p.boundaries(n, weights=weights)
+            opt = p.optimal_boundaries(n, weights=weights)
+            w = weights or [1.0] * n
+
+            def bottleneck(c):
+                return max(sum(costs[c[i]:c[i + 1]]) / w[i] for i in range(n))
+
+            assert bottleneck(opt) <= bottleneck(greedy) + 1e-6
+            assert opt[0] == 0 and opt[-1] == len(costs)
 
 
 def test_recalibration_blends_observed_time():

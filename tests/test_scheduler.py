@@ -1,7 +1,7 @@
 """Task Scheduler / NSA (paper Alg. 1, Eq. 4-8) behaviour + properties."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st
 
 from repro.core.monitor import NodeStats
 from repro.core.scheduler import (DEFAULT_WEIGHTS, TaskRequirements,
@@ -106,6 +106,46 @@ def test_fairness_distribution_property(n_tasks):
         s.select_node(nodes)
     counts = [s.task_counts.get(f"n{i}", 0) for i in range(4)]
     assert max(counts) - min(counts) <= 1
+
+
+# --- edge cases --------------------------------------------------------------
+
+def test_all_nodes_skipped_for_mixed_reasons_returns_none():
+    s = TaskScheduler()
+    nodes = [stats("a", online=False), stats("b", load=0.95),
+             stats("c", lat=200.0), stats("d", mem_used=1023.0)]
+    assert s.select_node(nodes, TaskRequirements(mem_mb=64)) is None
+    assert s.skip_counts == {"offline": 1, "overloaded": 1,
+                             "high-latency": 1, "insufficient-resources": 1}
+
+
+def test_weight_sum_must_be_one():
+    with pytest.raises(AssertionError):
+        TaskScheduler(weights=dict(resource=0.5, load=0.5, perf=0.5, balance=0.5))
+    # a valid re-weighting is accepted
+    TaskScheduler(weights=dict(resource=0.4, load=0.3, perf=0.2, balance=0.1))
+
+
+def test_task_completed_never_drives_counts_negative():
+    s = TaskScheduler()
+    for _ in range(5):
+        s.task_completed("ghost", 10.0)   # completions with no prior selection
+    assert s.task_counts.get("ghost", 0) == 0
+    s.select_node([stats("ghost")])
+    assert s.task_counts["ghost"] == 1
+    for _ in range(3):
+        s.task_completed("ghost", 10.0)
+    assert s.task_counts["ghost"] == 0    # floors at zero, never negative
+
+
+def test_perf_score_with_single_node_history():
+    s = TaskScheduler()
+    for t in (10.0, 20.0, 30.0):
+        s.task_completed("solo", t)
+    # only node with history: avg/max = 20/30, score = 1/(1 + 2/3)
+    assert s._perf_score("solo") == pytest.approx(1.0 / (1.0 + 20.0 / 30.0))
+    assert 0.5 < s._perf_score("solo") <= 1.0
+    assert s._perf_score("unseen") == 1.0  # no history defaults to best score
 
 
 def test_overhead_accounting():
