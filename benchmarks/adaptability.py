@@ -1,6 +1,6 @@
 """Paper §IV-C + §I motivation: adaptability to dynamic cluster events.
 
-Two parts:
+Three parts:
 
 1. The paper's deployment scenarios (standard / scale-up / scale-down) and
    the task-parallel node-join event, as in the seed.
@@ -10,17 +10,28 @@ Two parts:
    scenario is run twice — with the controller, and with the degraded
    fixed-boundary fallback (redeploy-only, the paper's §V limitation) — and
    the adaptive run must be strictly faster.
+3. Scale: synthetic 20- and 50-node heterogeneous clusters (mixed
+   1-CPU/1GB and 0.4-CPU/512MB paper profiles) planned by the DP search in
+   sub-second wall time, where the exhaustive joint search (n! node orders)
+   is intractable — plus a closed-loop node-death run on the 20-node
+   cluster to show mid-run re-planning stays sub-second at that scale.
 
 Run:  PYTHONPATH=src python benchmarks/adaptability.py
 """
 
 from __future__ import annotations
 
+import math
+import time
+
 from repro.core.adaptation import (cpu_throttle, latency_spike, node_death,
                                    node_recovery)
-from repro.core.cluster import EdgeCluster, make_paper_cluster
+from repro.core.cluster import (EdgeCluster, make_paper_cluster,
+                                make_synthetic_cluster)
 from repro.core.partitioner import ModelPartitioner
 from repro.core.pipeline import DistributedInference, run_task_parallel
+from repro.core.planner import (PartitionPlanner, PlannerConfig,
+                                node_views_from_cluster)
 from repro.models.graph import mobilenetv2_graph
 
 WARMUP_REQUESTS = 20
@@ -108,6 +119,65 @@ def closed_loop_rows():
     return rows
 
 
+def scale_rows():
+    """DP planning on 20/50-node synthetic heterogeneous clusters: the
+    regime where PR 1's exhaustive joint search (n! node orders) is
+    intractable. Asserts the sub-second re-planning budget."""
+    g = mobilenetv2_graph()
+    rows = []
+    for n in (20, 50):
+        cluster = make_synthetic_cluster(n, seed=7)
+        planner = PartitionPlanner(g)
+        views = node_views_from_cluster(cluster)
+        t0 = time.perf_counter()
+        res = planner.plan(views, mode="dp")
+        wall_s = time.perf_counter() - t0
+        assert wall_s < 1.0, (
+            f"{n}-node DP plan took {wall_s:.2f}s (> 1s budget)")
+        # baseline: capability-ordered n-way split (PR 1's n > 5 fallback)
+        desc = sorted(views, key=lambda v: -v.capability)
+        m = min(n, len(g.layers))
+        naive_plan = ModelPartitioner(g).plan(
+            m, weights=[v.capability for v in desc[:m]], method="optimal")
+        from repro.core.planner import bottleneck_ms
+        naive_bott = bottleneck_ms(
+            g, naive_plan.partitions,
+            {i: v.node_id for i, v in enumerate(desc[:m])}, cluster)
+        rows.append(dict(
+            config=f"scale-{n}-node-dp-plan",
+            plan_wall_ms=round(wall_s * 1e3, 1),
+            bottleneck_ms=round(res.bottleneck_ms, 2),
+            stages=res.stages,
+            dp_runs=res.dp_runs,
+            capability_order_bottleneck_ms=round(naive_bott, 2),
+            improvement_pct=round(
+                100 * (1 - res.bottleneck_ms / naive_bott), 1),
+            exhaustive_orders=f"{math.factorial(n):.2e}",
+        ))
+
+    # closed-loop node death at 20 nodes: the controller re-plans mid-run
+    # through the same DP (sub-second), where exhaustive search cannot
+    cluster = make_synthetic_cluster(20, seed=11)
+    d = DistributedInference(cluster, ModelPartitioner(g), method="planner",
+                             adaptive=True)
+    d.run(WARMUP_REQUESTS, name="warmup", concurrency=CONCURRENCY)
+    t0 = d.cluster.clock.now_ms
+    victim = d.placement[max(d.placement)]
+    rep = d.run(FAULT_REQUESTS, name="scale-death",
+                concurrency=CONCURRENCY,
+                scenario=[node_death(t0 + 50.0, victim)])
+    migrations = [e for e in d.controller.events if e.kind == "migrate"]
+    assert migrations, "20-node node death must trigger a re-partition"
+    rows.append(dict(
+        config="scale-20-node-closed-loop-death",
+        steady_ms=round(rep.steady_latency_ms, 1),
+        migrations=d.controller.migrations,
+        stages=len(d.plan.partitions),
+        event_log=[str(e) for e in d.controller.events],
+    ))
+    return rows
+
+
 def run():
     g = mobilenetv2_graph()
     rows = []
@@ -143,6 +213,9 @@ def run():
 
     # closed-loop adaptive re-partitioning scenarios
     rows.extend(closed_loop_rows())
+
+    # DP planner at 20/50-node scale
+    rows.extend(scale_rows())
     return rows
 
 

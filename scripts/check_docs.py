@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Docstring lint for the public API of ``repro.core``.
+
+Fails (exit 1 / non-empty report) when a public symbol — module, class,
+function, method, or property defined in a ``repro.core`` module — has no
+docstring. Auto-generated dataclass docstrings (the ``Cls(field=...)``
+signature string) count as missing: they document nothing.
+
+Registered as a tier-1 test via ``tests/test_docs.py`` so doc rot is caught
+the same way behavioral regressions are.
+
+Run standalone:  PYTHONPATH=src python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import inspect
+import pkgutil
+import sys
+from typing import List
+
+DEFAULT_PACKAGE = "repro.core"
+
+#: symbols excluded from the check: dunder-adjacent plumbing that inherits
+#: meaning from the protocol it implements.
+SKIP_NAMES = {"main"}
+
+
+def _missing_doc(obj, owner_name: str) -> bool:
+    doc = inspect.getdoc(obj)
+    if not doc or not doc.strip():
+        return True
+    # reject the auto-generated dataclass signature docstring
+    if inspect.isclass(obj) and doc.startswith(obj.__name__ + "("):
+        return True
+    return False
+
+
+def _check_class(cls, modname: str, report: List[str]) -> None:
+    if _missing_doc(cls, modname):
+        report.append(f"{modname}.{cls.__name__}: class docstring missing")
+    for name, member in vars(cls).items():
+        if name.startswith("_") or name in SKIP_NAMES:
+            continue
+        qual = f"{modname}.{cls.__name__}.{name}"
+        if isinstance(member, property):
+            if not (member.fget and member.fget.__doc__
+                    and member.fget.__doc__.strip()):
+                report.append(f"{qual}: property docstring missing")
+        elif isinstance(member, (staticmethod, classmethod)):
+            if _missing_doc(member.__func__, qual):
+                report.append(f"{qual}: method docstring missing")
+        elif inspect.isfunction(member):
+            if _missing_doc(member, qual):
+                report.append(f"{qual}: method docstring missing")
+
+
+def check_package(package: str = DEFAULT_PACKAGE) -> List[str]:
+    """Return a report line for every public symbol in ``package`` that
+    lacks a docstring (empty list == clean)."""
+    report: List[str] = []
+    pkg = importlib.import_module(package)
+    modules = [package] + [
+        f"{package}.{m.name}"
+        for m in pkgutil.iter_modules(pkg.__path__)]
+    for modname in modules:
+        mod = importlib.import_module(modname)
+        if not (mod.__doc__ and mod.__doc__.strip()):
+            report.append(f"{modname}: module docstring missing")
+        for name, obj in vars(mod).items():
+            if name.startswith("_") or name in SKIP_NAMES:
+                continue
+            if getattr(obj, "__module__", None) != modname:
+                continue   # imported, not defined here
+            if inspect.isclass(obj):
+                _check_class(obj, modname, report)
+            elif inspect.isfunction(obj):
+                if _missing_doc(obj, modname):
+                    report.append(f"{modname}.{name}: docstring missing")
+    return sorted(report)
+
+
+def main() -> int:
+    package = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PACKAGE
+    report = check_package(package)
+    for line in report:
+        print(line)
+    if report:
+        print(f"\n{len(report)} public symbol(s) missing docstrings "
+              f"in {package}", file=sys.stderr)
+        return 1
+    print(f"{package}: all public symbols documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,19 +17,26 @@ from repro.core.adaptation import (AdaptationConfig, AdaptationController,
                                    ScenarioEvent, cpu_throttle, latency_spike,
                                    node_death, node_recovery)
 from repro.core.cache import ResultCache
-from repro.core.cluster import EdgeCluster, EdgeNode, make_paper_cluster
+from repro.core.cluster import (EdgeCluster, EdgeNode, make_paper_cluster,
+                                make_synthetic_cluster)
 from repro.core.cost_model import NodeProfile, PROFILES
 from repro.core.deployer import ModelDeployer
 from repro.core.monitor import NodeStats, ResourceMonitor
 from repro.core.partitioner import ModelPartitioner, Partition, PartitionPlan
 from repro.core.pipeline import DistributedInference, RunReport, run_monolithic
+from repro.core.planner import (NodeView, PartitionPlanner, PlannerConfig,
+                                PlanResult, node_views_from_cluster,
+                                node_views_from_stats)
 from repro.core.scheduler import TaskRequirements, TaskScheduler
 
 __all__ = [
     "AdaptationConfig", "AdaptationController", "ScenarioEvent",
     "cpu_throttle", "latency_spike", "node_death", "node_recovery",
     "ResultCache", "EdgeCluster", "EdgeNode", "make_paper_cluster",
-    "NodeProfile", "PROFILES", "ModelDeployer", "NodeStats", "ResourceMonitor",
-    "ModelPartitioner", "Partition", "PartitionPlan", "DistributedInference",
-    "RunReport", "run_monolithic", "TaskRequirements", "TaskScheduler",
+    "make_synthetic_cluster", "NodeProfile", "PROFILES", "ModelDeployer",
+    "NodeStats", "ResourceMonitor", "ModelPartitioner", "Partition",
+    "PartitionPlan", "DistributedInference", "RunReport", "run_monolithic",
+    "NodeView", "PartitionPlanner", "PlannerConfig", "PlanResult",
+    "node_views_from_cluster", "node_views_from_stats",
+    "TaskRequirements", "TaskScheduler",
 ]

@@ -30,22 +30,22 @@ expressed as ``ScenarioEvent``s the pipeline applies at submit boundaries.
 
 from __future__ import annotations
 
-import itertools
 import math
-from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.cluster import EdgeCluster
-from repro.core.cost_model import (execution_ms, partition_cost,
-                                   working_set_bytes)
 from repro.core.monitor import (LATENCY_THRESHOLD_MS, NodeStats,
                                 POLL_INTERVAL_MS)
 from repro.core.partitioner import Partition, PartitionPlan
+from repro.core.planner import (PartitionPlanner, PlannerConfig,
+                                bottleneck_ms, node_views_from_stats)
 
 
 @dataclass
 class AdaptationConfig:
+    """Tuning knobs for the closed loop: drift thresholds, migration
+    economics, and the re-planning search configuration."""
     load_threshold: float = 0.8         # sustained current_load trigger
     sustained_polls: int = 3            # consecutive polls above threshold
     stability_threshold: float = 0.7    # stability drop trigger
@@ -56,10 +56,13 @@ class AdaptationConfig:
     redeploy_penalty_ms: float = 25.0   # per-moved-partition restart cost
     min_gain_ratio: float = 1.0         # gain must exceed cost * ratio
     cooldown_ms: float = POLL_INTERVAL_MS  # between voluntary migrations
+    planner: PlannerConfig = field(default_factory=PlannerConfig)
 
 
 @dataclass
 class AdaptationEvent:
+    """One timestamped control-loop decision (drift, migrate, or skip),
+    surfaced via ``RunReport.adaptation``."""
     t_ms: float
     kind: str                  # drift | migrate | skip
     detail: str
@@ -71,6 +74,8 @@ class AdaptationEvent:
 
 @dataclass
 class MigrationDecision:
+    """Outcome of one drift evaluation: whether to migrate, the competing
+    bottleneck predictions, and the candidate (plan, assignment) if any."""
     migrate: bool
     reason: str
     drifts: List[str]
@@ -86,6 +91,8 @@ class MigrationDecision:
 
 @dataclass(frozen=True)
 class ScenarioEvent:
+    """A timed cluster mutation the pipeline applies at submit boundaries
+    (the paper's dynamic-environment events, §I)."""
     at_ms: float
     action: str                        # offline | recover | profile
     node_id: str
@@ -93,10 +100,12 @@ class ScenarioEvent:
 
 
 def node_death(at_ms: float, node_id: str) -> ScenarioEvent:
+    """Schedule ``node_id`` to go offline at ``at_ms``."""
     return ScenarioEvent(at_ms, "offline", node_id)
 
 
 def node_recovery(at_ms: float, node_id: str) -> ScenarioEvent:
+    """Schedule a previously-offline ``node_id`` to rejoin at ``at_ms``."""
     return ScenarioEvent(at_ms, "recover", node_id)
 
 
@@ -108,11 +117,14 @@ def cpu_throttle(at_ms: float, node_id: str, cpu: float = 0.4,
 
 def latency_spike(at_ms: float, node_id: str,
                   net_latency_ms: float = 80.0) -> ScenarioEvent:
+    """Schedule a network-latency spike on ``node_id`` at ``at_ms``."""
     return ScenarioEvent(at_ms, "profile", node_id,
                          dict(net_latency_ms=net_latency_ms))
 
 
 def apply_scenario_event(cluster: EdgeCluster, ev: ScenarioEvent) -> None:
+    """Apply one ``ScenarioEvent`` to the cluster (offline / recover /
+    profile mutation)."""
     if ev.action == "offline":
         cluster.remove_node(ev.node_id)
     elif ev.action == "recover":
@@ -135,6 +147,8 @@ class AdaptationController:
         self.monitor = pipeline.monitor
         self.partitioner = pipeline.partitioner
         self.deployer = pipeline.deployer
+        self.planner = PartitionPlanner(self.partitioner.graph,
+                                        self.cfg.planner)
         self.events: List[AdaptationEvent] = []
         self.migrations = 0
         self.decisions = 0
@@ -180,21 +194,15 @@ class AdaptationController:
 
     def _predicted_bottleneck_ms(self, partitions: List[Partition],
                                  assignment: Dict[int, str]) -> float:
-        """Steady-state period: slowest node-serialized stage set. Uses the
+        """Steady-state period of (partitions, assignment) under the shared
+        planner objective (``planner.bottleneck_ms``): slowest node-serialized
+        stage set, execution plus incoming boundary transfers. Uses the
         partitioner's *current* calibration for both plans so comparisons are
         apples-to-apples even when the plan was built at another scale."""
-        graph = self.partitioner.graph
-        calib = self.partitioner.calibration
-        per_node: Dict[str, float] = defaultdict(float)
-        for part in partitions:
-            node = self.cluster.nodes[assignment[part.index]]
-            if not node.online:
-                return math.inf
-            cost = partition_cost(graph, part.lo, part.hi) * calib
-            cost *= self.pipeline.batch / self.deployer.speedup
-            ws = working_set_bytes(graph, part.lo, part.hi, self.pipeline.batch)
-            per_node[node.node_id] += execution_ms(cost, node.profile, ws)
-        return max(per_node.values()) if per_node else math.inf
+        return bottleneck_ms(self.partitioner.graph, partitions, assignment,
+                             self.cluster, batch=self.pipeline.batch,
+                             calibration=self.partitioner.calibration,
+                             speedup=self.deployer.speedup)
 
     def _predicted_migration_cost_ms(self, plan: PartitionPlan,
                                      assignment: List[str]) -> float:
@@ -209,30 +217,21 @@ class AdaptationController:
     def _candidate(self, stats: Dict[str, NodeStats]):
         """Best (plan, stage->node assignment) for the live capabilities.
 
-        Stage order is fixed (contiguous pipeline) but node order is not —
-        e.g. a heavyweight LM head at the END of the layer list must not land
-        on the weakest node just because stages were dealt out by capability
-        rank. For small clusters, solve boundaries + assignment jointly by
-        scoring every node permutation with the real execution model; larger
-        clusters fall back to capability order.
+        Delegates the joint boundary + assignment search to the
+        ``PartitionPlanner``: exhaustive (every node order through the DP
+        recurrence) for small clusters, the polynomial candidate-order DP
+        beyond that — so re-planning stays sub-second at 50+ nodes where
+        PR 1's permutation scoring was intractable. Node capabilities come
+        from the live snapshots, de-rated by scheduler execution history.
         """
-        live = sorted((s for s in stats.values() if s.capability > 0.0),
-                      key=lambda s: -s.capability)
-        if not live:
+        views = node_views_from_stats(stats, self.cluster,
+                                      scheduler=self.pipeline.scheduler)
+        result = self.planner.plan(views, batch=self.pipeline.batch,
+                                   calibration=self.partitioner.calibration,
+                                   speedup=self.deployer.speedup)
+        if result is None:
             return None, None
-        n = min(len(live), len(self.partitioner.graph.layers))
-        live = live[:n]
-        orders = (itertools.permutations(live) if n <= 5 else [tuple(live)])
-        best = None
-        for order in orders:
-            plan = self.partitioner.plan(
-                n, weights=[s.capability for s in order], method="optimal")
-            assignment = [s.node_id for s in order]
-            bott = self._predicted_bottleneck_ms(
-                plan.partitions, dict(enumerate(assignment)))
-            if best is None or bott < best[0]:
-                best = (bott, plan, assignment)
-        return best[1], best[2]
+        return self.partitioner.plan_from_cuts(result.cuts), result.assignment
 
     def evaluate(self, force_poll: bool = False) -> Optional[MigrationDecision]:
         """Run one control-loop iteration; returns the decision if drift was
@@ -318,6 +317,9 @@ class AdaptationController:
                       transfer_charged_ms=round(transfer_cost, 2)))
 
     def maybe_adapt(self, force_poll: bool = False) -> Optional[MigrationDecision]:
+        """One full control-loop step: evaluate drift and apply the migration
+        if the decision says so. Returns the decision, or None when no fresh
+        telemetry / no drift."""
         decision = self.evaluate(force_poll=force_poll)
         if decision is None:
             return None
@@ -345,6 +347,8 @@ class AdaptationController:
         self.events.append(AdaptationEvent(t_ms, kind, detail, data or {}))
 
     def summary(self) -> dict:
+        """Migration/decision counters plus the rendered event log — the
+        ``RunReport.adaptation`` payload."""
         return dict(
             migrations=self.migrations,
             decisions=self.decisions,
@@ -353,4 +357,5 @@ class AdaptationController:
 
 
 def assignment_str(placement: Dict[int, str]) -> str:
+    """Render a stage->node placement map compactly for event logs."""
     return "{" + ", ".join(f"{i}:{placement[i]}" for i in sorted(placement)) + "}"

@@ -15,11 +15,15 @@ import numpy as np
 
 
 def digest(x) -> str:
+    """Stable short hash of an input array (the cache's request signature)."""
     arr = np.asarray(x)
     return hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
 
 
 class ResultCache:
+    """LRU result cache keyed by (model, partition layer range, input
+    digest); a hit skips the partition's compute and boundary transfer."""
+
     def __init__(self, capacity: int = 256):
         self.capacity = capacity
         self._store: "OrderedDict[Tuple, Any]" = OrderedDict()
@@ -35,6 +39,8 @@ class ResultCache:
         return (model, part_range, input_digest)
 
     def get(self, key: Tuple) -> Optional[Any]:
+        """Look up a cached result; counts the hit/miss and refreshes LRU
+        recency on hit."""
         if key in self._store:
             self._store.move_to_end(key)
             self.hits += 1
@@ -43,19 +49,25 @@ class ResultCache:
         return None
 
     def put(self, key: Tuple, value: Any, transfer_bytes: float = 0.0) -> None:
+        """Insert a result, evicting the least-recently-used entry at
+        capacity."""
         self._store[key] = value
         self._store.move_to_end(key)
         if len(self._store) > self.capacity:
             self._store.popitem(last=False)
 
     def credit_saved(self, num_bytes: float) -> None:
+        """Record boundary-transfer bytes a hit avoided (Table I's
+        network-bandwidth row)."""
         self.bytes_saved += num_bytes
 
     @property
     def hit_rate(self) -> float:
+        """Fraction of lookups served from cache."""
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
 
     def stats(self) -> dict:
+        """Hit/miss counters, entry count, and bytes saved, for reports."""
         return dict(hits=self.hits, misses=self.misses, hit_rate=self.hit_rate,
                     entries=len(self._store), bytes_saved=self.bytes_saved)

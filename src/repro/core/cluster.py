@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -21,16 +22,20 @@ from repro.core.cost_model import NodeProfile, PROFILES, execution_ms, transfer_
 
 
 class SimClock:
+    """Shared simulated wall clock (milliseconds)."""
+
     def __init__(self):
         self.now_ms: float = 0.0
 
     def advance(self, ms: float) -> None:
+        """Move simulated time forward by ``ms`` (never backwards)."""
         assert ms >= 0
         self.now_ms += ms
 
 
 @dataclass
 class TaskRecord:
+    """One executed task on one node: identity, timing window, and cost."""
     task_id: int
     node_id: str
     start_ms: float
@@ -39,6 +44,7 @@ class TaskRecord:
 
     @property
     def exec_ms(self) -> float:
+        """Execution duration (end minus start)."""
         return self.end_ms - self.start_ms
 
 
@@ -66,9 +72,11 @@ class EdgeNode:
         return min(1.0, self.active_tasks / 2.0)
 
     def mem_pct(self) -> float:
+        """Deployed-partition memory as a percentage of the node limit."""
         return 100.0 * self.mem_used_bytes / self.profile.mem_bytes
 
     def cpu_pct(self, window_ms: float) -> float:
+        """CPU utilization over the poll window (busy time / window)."""
         if window_ms <= 0:
             return 0.0
         return min(100.0, 100.0 * self.cpu_busy_ms / window_ms)
@@ -90,10 +98,12 @@ class EdgeNode:
         return rec
 
     def receive(self, num_bytes: float) -> float:
+        """Account inbound bytes; returns the link transfer time."""
         self.net_rx_bytes += num_bytes
         return transfer_ms(num_bytes, self.profile)
 
     def send(self, num_bytes: float) -> float:
+        """Account outbound bytes; returns the link transfer time."""
         self.net_tx_bytes += num_bytes
         return transfer_ms(num_bytes, self.profile)
 
@@ -110,6 +120,8 @@ class EdgeCluster:
     # --- membership -------------------------------------------------------
 
     def add_node(self, node_id: str, profile: NodeProfile | str) -> EdgeNode:
+        """Register a device (the paper's "new device added" event);
+        ``profile`` may be a ``PROFILES`` name or an explicit profile."""
         if isinstance(profile, str):
             profile = PROFILES[profile]
         node = EdgeNode(node_id, profile)
@@ -119,6 +131,7 @@ class EdgeCluster:
         return node
 
     def remove_node(self, node_id: str) -> None:
+        """Mark a device offline (the paper's "device offline" event)."""
         node = self.nodes[node_id]
         node.online = False
         self.events.append(f"[{self.clock.now_ms:9.1f}ms] offline {node_id}")
@@ -141,9 +154,11 @@ class EdgeCluster:
         return node
 
     def online_nodes(self) -> List[EdgeNode]:
+        """Currently-online nodes, in registration order."""
         return [n for n in self.nodes.values() if n.online]
 
     def next_task_id(self) -> int:
+        """Cluster-unique monotonically increasing task id."""
         return next(self._task_ids)
 
 
@@ -152,4 +167,32 @@ def make_paper_cluster(profiles=("high", "medium", "low")) -> EdgeCluster:
     c = EdgeCluster()
     for i, p in enumerate(profiles):
         c.add_node(f"edge-{i}-{p}", p)
+    return c
+
+
+def make_synthetic_cluster(n: int, seed: int = 0, high_fraction: float = 0.5,
+                           jitter: float = 0.15) -> EdgeCluster:
+    """A deterministic n-node heterogeneous edge cluster for the scale
+    experiments (the regime of *Partitioning and Deployment of DNNs on Edge
+    Clusters* / *SEIFER*, where tens of devices cooperate).
+
+    Each node draws one of the paper's two capacity classes —
+    ``high_fraction`` get the 1.0-CPU/1024MB profile, the rest the
+    0.4-CPU/512MB low-resource profile (§IV-A) — with a +-``jitter``
+    relative CPU/memory perturbation so no two devices are identical, as
+    in a real fleet. Reproducible for a given ``seed``.
+    """
+    rnd = random.Random(seed)
+    c = EdgeCluster()
+    for i in range(n):
+        if rnd.random() < high_fraction:
+            base, name = PROFILES["high"], "high"
+        else:
+            base, name = PROFILES["low"], "low"
+        j = 1.0 + rnd.uniform(-jitter, jitter)
+        profile = NodeProfile(cpu=round(base.cpu * j, 3),
+                              mem_mb=round(base.mem_mb * j, 1),
+                              net_latency_ms=base.net_latency_ms,
+                              net_bw_mbps=base.net_bw_mbps)
+        c.add_node(f"edge-{i}-{name}", profile)
     return c

@@ -40,6 +40,8 @@ FIXED_OVERHEAD_MS = 2.0
 
 @dataclass(frozen=True)
 class NodeProfile:
+    """Provisioned resources of one edge device (the paper's cgroup
+    limits plus bridge-network link parameters)."""
     cpu: float           # CPU fraction (1.0 == one core)
     mem_mb: float
     net_latency_ms: float = 1.0
@@ -47,6 +49,7 @@ class NodeProfile:
 
     @property
     def mem_bytes(self) -> float:
+        """Memory limit in bytes."""
         return self.mem_mb * 1024 * 1024
 
 
@@ -82,10 +85,13 @@ def transfer_ms(num_bytes: float, profile: NodeProfile) -> float:
 
 
 def partition_cost(graph: ModelGraph, lo: int, hi: int) -> float:
+    """Raw (uncalibrated) cost of layers ``[lo, hi)``."""
     return sum(l.cost for l in graph.layers[lo:hi])
 
 
 def partition_params_bytes(graph: ModelGraph, lo: int, hi: int, dtype_bytes: int = 4) -> int:
+    """Parameter bytes of layers ``[lo, hi)`` at ``dtype_bytes`` per
+    weight."""
     return dtype_bytes * sum(l.params for l in graph.layers[lo:hi])
 
 
@@ -112,8 +118,10 @@ TPU_ICI_BW = 50e9                # bytes/s/link
 
 
 def tpu_stage_ms(flops: float, chips: int) -> float:
+    """Compute-roofline stage time on ``chips`` TPU v5e chips."""
     return flops / (TPU_PEAK_FLOPS * chips) * 1e3
 
 
 def tpu_boundary_ms(num_bytes: float) -> float:
+    """ICI transfer time for a stage-boundary activation."""
     return num_bytes / TPU_ICI_BW * 1e3

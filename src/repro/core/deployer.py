@@ -29,6 +29,7 @@ OPT_LEVELS = {
 
 @dataclass
 class Deployment:
+    """One partition resident on one node, with its shipping cost."""
     partition: Partition
     node_id: str
     opt_level: str
@@ -37,6 +38,10 @@ class Deployment:
 
 
 class ModelDeployer:
+    """Paper §III-D: places partitions (via the NSA), charges model
+    transfer, applies the optimization level, and handles redeploys and
+    live migration."""
+
     def __init__(self, cluster: EdgeCluster, monitor: ResourceMonitor,
                  scheduler: TaskScheduler, opt_level: str = "none"):
         assert opt_level in OPT_LEVELS
@@ -49,6 +54,7 @@ class ModelDeployer:
 
     @property
     def speedup(self) -> float:
+        """Compute speedup factor of the active optimization level."""
         return OPT_LEVELS[self.opt_level][0]
 
     def _mem_req_mb(self, part: Partition) -> float:
@@ -84,6 +90,7 @@ class ModelDeployer:
         return placed
 
     def undeploy(self, part_index: int) -> None:
+        """Deactivate a deployment and release its node memory."""
         d = self.deployments.get(part_index)
         if d and d.active:
             node = self.cluster.nodes[d.node_id]
@@ -93,6 +100,7 @@ class ModelDeployer:
             d.active = False
 
     def assignment(self) -> Dict[int, str]:
+        """Current {partition_index: node_id} for active deployments."""
         return {i: d.node_id for i, d in self.deployments.items() if d.active}
 
     # --- live migration (Adaptation Controller) ------------------------------

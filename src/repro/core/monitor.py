@@ -27,6 +27,8 @@ LATENCY_THRESHOLD_MS = 50.0
 
 @dataclass
 class NodeStats:
+    """One node's telemetry snapshot (the paper's Docker-stats metric
+    set) plus derived availability and capability scores."""
     node_id: str
     online: bool
     cpu: float                  # provisioned CPU fraction
@@ -42,10 +44,12 @@ class NodeStats:
 
     @property
     def cpu_avail(self) -> float:
+        """CPU share not consumed by current load (Eq. 5 numerator)."""
         return self.cpu * max(0.0, 1.0 - self.current_load)
 
     @property
     def mem_avail_mb(self) -> float:
+        """Free memory under the node limit (Eq. 5 numerator)."""
         return max(0.0, self.mem_limit_mb - self.mem_used_mb)
 
     @property
@@ -62,6 +66,9 @@ class NodeStats:
 
 
 class ResourceMonitor:
+    """Paper §III-A: 1 Hz polling of per-node CPU/memory/network stats,
+    with history windows and the monitoring-overhead accounting."""
+
     def __init__(self, cluster: EdgeCluster):
         self.cluster = cluster
         self.last_poll_ms: float = -1e30
@@ -119,6 +126,7 @@ class ResourceMonitor:
         )
 
     def online_stats(self) -> List[NodeStats]:
+        """Fresh-enough snapshots of the currently-online nodes."""
         self.poll()
         return [s for s in self.snapshots.values() if s.online]
 

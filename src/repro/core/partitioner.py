@@ -28,8 +28,57 @@ from repro.core.cost_model import (boundary_bytes, partition_cost,
 from repro.models.graph import ModelGraph
 
 
+def bottleneck_boundaries(layer_costs: Sequence[float], num_partitions: int,
+                          weights: Optional[Sequence[float]] = None,
+                          iters: int = 60) -> Optional[List[int]]:
+    """Contiguous cuts minimizing the bottleneck stage *time* (beyond-paper):
+    binary search on the bottleneck T with a greedy feasibility walk;
+    partition i must satisfy cost_i <= T * weights[i]. Degenerate trailing
+    stages are filled as empty ``[L, L]`` ranges. Returns None only if no
+    feasible split was found (the upper bound makes this unreachable for
+    positive weights). Shared by ``ModelPartitioner.optimal_boundaries``
+    and the planner's candidate-order seeding."""
+    costs = list(layer_costs)
+    n = num_partitions
+    w = list(weights) if weights is not None else [1.0] * n
+
+    def feasible(T: float) -> Optional[List[int]]:
+        cuts = [0]
+        cum = 0.0
+        pi = 0
+        for i, c in enumerate(costs):
+            if cum + c > T * w[pi] + 1e-9:
+                if cum == 0.0:      # single layer exceeds budget
+                    return None
+                cuts.append(i)
+                pi += 1
+                cum = c
+                if pi >= n:
+                    return None
+            else:
+                cum += c
+        cuts.append(len(costs))
+        while len(cuts) < n + 1:
+            cuts.insert(-1, len(costs))
+        return cuts
+
+    lo = max(costs) / max(w)
+    hi = sum(costs) / min(w) + 1.0
+    best = None
+    for _ in range(iters):
+        mid = (lo + hi) / 2
+        cand = feasible(mid)
+        if cand is not None:
+            best, hi = cand, mid
+        else:
+            lo = mid
+    return best
+
+
 @dataclass(frozen=True)
 class Partition:
+    """One deployable stage: the contiguous layer range ``[lo, hi)`` plus
+    its cost, parameter bytes, and boundary activation sizes (paper B4)."""
     index: int
     lo: int                      # first layer (inclusive)
     hi: int                      # last layer (exclusive)
@@ -40,34 +89,45 @@ class Partition:
 
     @property
     def num_layers(self) -> int:
+        """Number of layers in this partition."""
         return self.hi - self.lo
 
 
 @dataclass
 class PartitionPlan:
+    """An ordered list of contiguous ``Partition`` stages covering the
+    whole model graph."""
     graph_name: str
     partitions: List[Partition]
 
     @property
     def sizes(self) -> List[int]:
+        """Per-stage layer counts (the paper reports plans in this form)."""
         return [p.num_layers for p in self.partitions]
 
     @property
     def costs(self) -> List[float]:
+        """Per-stage computation costs (calibrated Eq. 1/2/9 units)."""
         return [p.cost for p in self.partitions]
 
     @property
     def comm_bytes(self) -> int:
+        """Total activation bytes crossing stage boundaries per request."""
         return sum(p.out_bytes for p in self.partitions[:-1])
 
     @property
     def imbalance(self) -> float:
+        """Max stage cost over mean stage cost (1.0 = perfectly balanced)."""
         c = self.costs
         mean = sum(c) / len(c)
         return max(c) / mean if mean else 1.0
 
 
 class ModelPartitioner:
+    """Paper §III-B: layer analysis, cost estimation (with historical
+    recalibration), boundary search, and ``PartitionPlan`` construction
+    for one ``ModelGraph``."""
+
     def __init__(self, graph: ModelGraph):
         self.graph = graph
         self._calibration = 1.0
@@ -91,6 +151,8 @@ class ModelPartitioner:
 
     @property
     def calibration(self) -> float:
+        """Current observed/predicted execution-time blend (1.0 = the
+        a-priori cost model)."""
         return self._calibration
 
     def calibration_drift(self, reference: float = 1.0) -> float:
@@ -99,6 +161,7 @@ class ModelPartitioner:
         return abs(self._calibration - reference) / max(reference, 1e-9)
 
     def reset_calibration(self) -> None:
+        """Forget observed history; back to the a-priori cost model."""
         self._calibration = 1.0
 
     # --- B3 -----------------------------------------------------------------
@@ -178,43 +241,10 @@ class ModelPartitioner:
     def optimal_boundaries(self, num_partitions: int,
                            weights: Optional[Sequence[float]] = None) -> List[int]:
         """Minimize the bottleneck stage *time* over contiguous partitions
-        (beyond-paper): binary search on the bottleneck T with a greedy
-        feasibility check. Partition i must satisfy cost_i <= T * weights[i].
+        (beyond-paper) via the shared :func:`bottleneck_boundaries` search.
         """
-        costs = [l.cost for l in self.graph.layers]
-        n = num_partitions
-        w = list(weights) if weights is not None else [1.0] * n
-
-        def feasible(T: float) -> Optional[List[int]]:
-            cuts = [0]
-            cum = 0.0
-            pi = 0
-            for i, c in enumerate(costs):
-                if cum + c > T * w[pi] + 1e-9:
-                    if cum == 0.0:      # single layer exceeds budget
-                        return None
-                    cuts.append(i)
-                    pi += 1
-                    cum = c
-                    if pi >= n:
-                        return None
-                else:
-                    cum += c
-            cuts.append(len(costs))
-            while len(cuts) < n + 1:
-                cuts.insert(-1, len(costs))
-            return cuts
-
-        lo = max(costs) / max(w)
-        hi = sum(costs) / min(w) + 1.0
-        best = None
-        for _ in range(60):
-            mid = (lo + hi) / 2
-            cand = feasible(mid)
-            if cand is not None:
-                best, hi = cand, mid
-            else:
-                lo = mid
+        best = bottleneck_boundaries([l.cost for l in self.graph.layers],
+                                     num_partitions, weights)
         assert best is not None
         return best
 
@@ -222,14 +252,34 @@ class ModelPartitioner:
 
     def plan(self, num_partitions: int, weights: Optional[Sequence[float]] = None,
              refine: bool = False, method: str = "greedy") -> PartitionPlan:
+        """Build a ``PartitionPlan`` with ``num_partitions`` contiguous stages.
+
+        Args:
+            num_partitions: stage count (1 <= n <= number of layers).
+            weights: optional per-stage capability weights; None keeps the
+                paper's uniform Eq. 3 targets.
+            refine: apply the bottleneck-reduction pass (greedy method only).
+            method: ``greedy`` (paper Eq. 3 cumulative split) or ``optimal``
+                (binary-search bottleneck minimization). For the joint
+                boundary+assignment search over a live cluster use
+                ``core.planner.PartitionPlanner`` and :meth:`plan_from_cuts`.
+        """
         if method == "optimal":
             cuts = self.optimal_boundaries(num_partitions, weights)
         else:
             cuts = self.boundaries(num_partitions, weights)
             if refine:
                 cuts = self.refine(cuts, weights)
+        return self.plan_from_cuts(cuts)
+
+    def plan_from_cuts(self, cuts: Sequence[int]) -> PartitionPlan:
+        """Materialize ``Partition`` records for an explicit cut list
+        (``[0, ..., num_layers]``) — the handoff point from the planner's DP
+        search, which chooses cuts jointly with the node assignment. Costs
+        are scaled by the current calibration, as in :meth:`plan`."""
+        assert cuts[0] == 0 and cuts[-1] == len(self.graph.layers), cuts
         parts = []
-        for i in range(num_partitions):
+        for i in range(len(cuts) - 1):
             lo, hi = cuts[i], cuts[i + 1]
             parts.append(Partition(
                 index=i, lo=lo, hi=hi,
@@ -241,4 +291,6 @@ class ModelPartitioner:
         return PartitionPlan(self.graph.name, parts)
 
     def working_set(self, part: Partition, batch: int = 1) -> float:
+        """Params + peak activation bytes for one partition at ``batch`` —
+        the memory-pressure input to ``cost_model.execution_ms``."""
         return working_set_bytes(self.graph, part.lo, part.hi, batch)

@@ -15,6 +15,7 @@ PyTorch container).
 
 from __future__ import annotations
 
+import dataclasses
 import statistics
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
@@ -25,15 +26,19 @@ from repro.core.adaptation import (AdaptationConfig, AdaptationController,
                                    ScenarioEvent, apply_scenario_event)
 from repro.core.cache import ResultCache, digest
 from repro.core.cluster import EdgeCluster
-from repro.core.cost_model import transfer_ms
+from repro.core.cost_model import execution_ms, transfer_ms
 from repro.core.deployer import ModelDeployer
 from repro.core.monitor import ResourceMonitor
 from repro.core.partitioner import ModelPartitioner, PartitionPlan
+from repro.core.planner import (PartitionPlanner, PlannerConfig,
+                                node_views_from_cluster)
 from repro.core.scheduler import SCHEDULING_OVERHEAD_MS, TaskScheduler
 
 
 @dataclass
 class RequestMetrics:
+    """Per-request timing: submit/finish, communication, cache hits, and
+    pure service time."""
     request_id: int
     submit_ms: float
     finish_ms: float
@@ -44,11 +49,14 @@ class RequestMetrics:
 
     @property
     def latency_ms(self) -> float:
+        """End-to-end latency including queueing (finish - submit)."""
         return self.finish_ms - self.submit_ms
 
 
 @dataclass
 class RunReport:
+    """Aggregate metrics of one request-stream run (the paper's Table I
+    columns, plus adaptation events when a controller is attached)."""
     name: str
     requests: List[RequestMetrics]
     network_bytes: float
@@ -62,19 +70,23 @@ class RunReport:
 
     @property
     def avg_latency_ms(self) -> float:
+        """Mean end-to-end latency (includes queueing)."""
         return statistics.fmean(r.latency_ms for r in self.requests)
 
     @property
     def avg_service_ms(self) -> float:
+        """Mean pure service time (execution + communication only)."""
         return statistics.fmean(r.service_ms for r in self.requests)
 
     @property
     def p99_latency_ms(self) -> float:
+        """99th-percentile end-to-end latency."""
         lats = sorted(r.latency_ms for r in self.requests)
         return lats[min(len(lats) - 1, int(0.99 * len(lats)))]
 
     @property
     def throughput_rps(self) -> float:
+        """Requests per second over the run's makespan."""
         makespan = max(r.finish_ms for r in self.requests) - min(
             r.submit_ms for r in self.requests)
         return 1000.0 * len(self.requests) / max(makespan, 1e-9)
@@ -86,9 +98,11 @@ class RunReport:
 
     @property
     def avg_comm_ms(self) -> float:
+        """Mean per-request boundary-transfer time."""
         return statistics.fmean(r.comm_ms for r in self.requests)
 
     def row(self) -> dict:
+        """Flatten the report into one benchmark-table row."""
         return dict(
             config=self.name,
             latency_ms=round(self.steady_latency_ms, 2),   # paper's metric
@@ -117,21 +131,47 @@ class DistributedInference:
                  executor: Optional[Callable] = None,
                  assignment: Optional[List[str]] = None,
                  batch: int = 1, adaptive: bool = False,
-                 adaptation: Optional[AdaptationConfig] = None):
+                 adaptation: Optional[AdaptationConfig] = None,
+                 planner: Optional[PlannerConfig] = None):
         self.cluster = cluster
         self.partitioner = partitioner
         self.monitor = ResourceMonitor(cluster)
         self.scheduler = TaskScheduler()
         self.deployer = ModelDeployer(cluster, self.monitor, self.scheduler, opt_level)
-        n = num_partitions or len(cluster.online_nodes())
-        self.plan: PartitionPlan = partitioner.plan(n, weights=weights,
-                                                    refine=refine, method=method)
         self.cache = ResultCache() if use_cache else None
         self.executor = executor
         self.batch = batch
+        if planner is None:
+            self.planner_cfg = PlannerConfig(max_stages=num_partitions)
+        elif num_partitions is not None and planner.max_stages is None:
+            # copy: never mutate a caller's (possibly shared) config object
+            self.planner_cfg = dataclasses.replace(
+                planner, max_stages=num_partitions)
+        else:
+            self.planner_cfg = planner
+        if method == "planner":
+            # joint boundaries + assignment from the DP planner; the same
+            # config drives rebalance() and (unless an AdaptationConfig
+            # overrides it) the AdaptationController's re-planning
+            assert assignment is None, \
+                "method='planner' chooses the assignment; don't pass one"
+            res = PartitionPlanner(partitioner.graph, self.planner_cfg).plan(
+                node_views_from_cluster(cluster, self.scheduler),
+                batch=batch, calibration=partitioner.calibration,
+                speedup=self.deployer.speedup)
+            if res is None:
+                raise RuntimeError("planner found no node with capacity")
+            self.plan = partitioner.plan_from_cuts(res.cuts)
+            assignment = res.assignment
+        else:
+            n = num_partitions or len(cluster.online_nodes())
+            self.plan = partitioner.plan(n, weights=weights,
+                                         refine=refine, method=method)
         self.placement = self.deployer.deploy_plan(self.plan, assignment)
+        if adaptation is None and adaptive:
+            adaptation = AdaptationConfig(planner=self.planner_cfg)
         self.controller: Optional[AdaptationController] = (
-            AdaptationController(self, adaptation) if adaptive or adaptation
+            AdaptationController(self, adaptation) if adaptation is not None
             else None)
         self._verified = executor is None
 
@@ -150,23 +190,36 @@ class DistributedInference:
 
     # --- elasticity (beyond-paper: the paper fixes boundaries after deploy) ---
 
-    def rebalance(self, method: str = "optimal") -> None:
+    def rebalance(self, method: str = "planner") -> None:
         """Re-partition for the *current* online nodes and redeploy.
 
         Addresses the paper's stated limitation (§V: "partition boundaries
-        are fixed after deployment"): on node join/offline the plan is
-        recomputed with capability weights ∝ node CPU and placed stage-i →
-        node-i (fastest node gets the costliest feasible stage).
+        are fixed after deployment"). With ``method="planner"`` (default)
+        the DP planner solves boundaries and assignment jointly; the legacy
+        ``optimal``/``greedy`` methods recompute capability-weighted
+        boundaries and place stage-i on the i-th most capable node.
         """
-        nodes = sorted(self.cluster.online_nodes(),
-                       key=lambda n: -n.profile.cpu)
-        weights = [n.profile.cpu for n in nodes]
+        if method == "planner":
+            res = PartitionPlanner(self.partitioner.graph,
+                                   self.planner_cfg).plan(
+                node_views_from_cluster(self.cluster, self.scheduler),
+                batch=self.batch, calibration=self.partitioner.calibration,
+                speedup=self.deployer.speedup)
+            if res is None:
+                raise RuntimeError("planner found no node with capacity")
+            plan, assignment = self.partitioner.plan_from_cuts(res.cuts), \
+                res.assignment
+        else:
+            nodes = sorted(self.cluster.online_nodes(),
+                           key=lambda n: -n.profile.cpu)
+            weights = [n.profile.cpu for n in nodes]
+            plan = self.partitioner.plan(len(nodes), weights=weights,
+                                         method=method)
+            assignment = [n.node_id for n in nodes]
         for i in list(self.deployer.deployments):
             self.deployer.undeploy(i)
-        self.plan = self.partitioner.plan(len(nodes), weights=weights,
-                                          method=method)
-        self.placement = self.deployer.deploy_plan(
-            self.plan, assignment=[n.node_id for n in nodes])
+        self.plan = plan
+        self.placement = self.deployer.deploy_plan(self.plan, assignment)
 
     # --- request processing ----------------------------------------------------
 
@@ -251,7 +304,14 @@ class DistributedInference:
                 rec = node.execute(self.cluster.clock, self.cluster.next_task_id(),
                                    part.cost * self.batch / self.deployer.speedup,
                                    working_set=ws, start_ms=t)
-                self.scheduler.task_completed(node.node_id, rec.exec_ms)
+                # observed vs cost-model-predicted feeds the planner's
+                # capability de-rating (identical by construction in the
+                # simulator; a real backend reports measured wall time)
+                pred = execution_ms(
+                    part.cost * self.batch / self.deployer.speedup,
+                    node.profile, ws)
+                self.scheduler.task_completed(node.node_id, rec.exec_ms,
+                                              predicted_ms=pred)
                 service += rec.exec_ms
                 t = rec.end_ms
                 if part.index < len(plan.partitions) - 1:

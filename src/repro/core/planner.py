@@ -1,0 +1,478 @@
+"""Scalable joint boundary + stage->node assignment planner.
+
+PR 1's ``AdaptationController`` solved the joint problem by scoring every
+node permutation, which caps out around n = 5 nodes (n! plans). This module
+replaces that with the dynamic-programming formulation used by the edge-
+cluster partitioning literature (Parthasarathy & Krishnamachari,
+*Partitioning and Deployment of DNNs on Edge Clusters*; *SEIFER*), so the
+closed loop scales to the 20-50+ node regime.
+
+**Objective.** A candidate is (cuts, assignment): contiguous layer ranges
+(stages) and one node per stage. The planner minimizes the steady-state
+pipeline period — the bottleneck node's serialized time per request::
+
+    stage_ms(a, b, v)  = transfer_in(boundary_bytes(a), v) + execution_ms(.)
+    bottleneck         = max over nodes of sum of that node's stage_ms
+
+Execution uses the real ``cost_model`` terms (CPU share, fixed overhead,
+memory-pressure superlinearity); the transfer term charges each stage's
+incoming activation to the *receiving* node's link (latency + bandwidth from
+``NodeProfile``), so heavy boundaries avoid slow links.
+
+**DP.** For a fixed node *order* v_1..v_k, let ``dp[j][l]`` be the best
+bottleneck covering layers ``[0, l)`` with stages assigned to an increasing
+subsequence of v_1..v_j (each node hosts at most one stage)::
+
+    dp[j][l] = min( dp[j-1][l],                                # skip v_j
+                    min over a < l of max(dp[j-1][a], t_j[a][l]) )
+
+This is exact *for that order* and runs in O(layers^2 * nodes) — each node
+step is one vectorized (L+1)x(L+1) max/min reduction. Free-order optimality
+is recovered by searching a small set of candidate orders (capability-sorted
+both ways plus, for every stage count m, the order induced by sorted-
+matching a balanced m-way split's stage costs to the m most capable nodes),
+then iterating DP <-> rematch to a fixed point and polishing with pairwise
+assignment swaps. ``mode="exhaustive"`` runs the same recurrence over *all*
+node orders — exact, feasible only for n <= ~5, and kept as the parity
+oracle for the tests.
+
+**Beam fallback.** The DP gives each node at most one contiguous stage.
+When one node is far faster than the rest it can pay to give it several
+*non-contiguous* stages (e.g. both heavy ends of the model);
+``mode="beam"`` runs a width-bounded left-to-right search over (cut here?,
+which node next?) decisions that allows node reuse — the non-contiguous
+fallback, at heuristic (not exact) quality.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import (BASE_THROUGHPUT, FIXED_OVERHEAD_MS,
+                                   MEM_PRESSURE_ALPHA, NodeProfile,
+                                   execution_ms, partition_cost, transfer_ms,
+                                   working_set_bytes)
+from repro.core.partitioner import bottleneck_boundaries
+from repro.models.graph import ModelGraph
+
+_EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class NodeView:
+    """What the planner needs to know about one node.
+
+    ``profile`` drives the timing model (the node's provisioned resources);
+    ``capability`` is the live scalar score (``NodeStats.capability``) used
+    to order and select nodes — a throttled or unstable node is deprioritized
+    even though its provisioned profile is unchanged.
+    """
+    node_id: str
+    profile: NodeProfile
+    capability: float
+
+
+def node_views_from_stats(stats, cluster, scheduler=None) -> List[NodeView]:
+    """Planner inputs from live monitor snapshots (mid-run re-planning).
+
+    Offline / zero-capability nodes are dropped. With a ``scheduler``, each
+    capability is scaled by ``TaskScheduler.perf_weight`` so nodes whose
+    observed execution times run hot against the fleet are deprioritized
+    (the paper's historical-performance signal, S_P, reaching the planner).
+    """
+    views = []
+    for nid, s in stats.items():
+        if not s.online or s.capability <= 0.0 or nid not in cluster.nodes:
+            continue
+        cap = s.capability
+        if scheduler is not None:
+            cap *= scheduler.perf_weight(nid)
+        views.append(NodeView(nid, cluster.nodes[nid].profile, cap))
+    return views
+
+
+def node_views_from_cluster(cluster, scheduler=None) -> List[NodeView]:
+    """Planner inputs from provisioned profiles (initial deployment: no
+    telemetry yet, so capability defaults to the node's CPU share)."""
+    views = []
+    for node in cluster.online_nodes():
+        cap = node.profile.cpu
+        if scheduler is not None:
+            cap *= scheduler.perf_weight(node.node_id)
+        views.append(NodeView(node.node_id, node.profile, cap))
+    return views
+
+
+@dataclass
+class PlannerConfig:
+    """Search knobs for :class:`PartitionPlanner`.
+
+    ``mode``: ``auto`` (exhaustive when n <= ``exhaustive_max_nodes``, DP
+    otherwise), ``dp``, ``beam``, or ``exhaustive``.
+    """
+    mode: str = "auto"
+    exhaustive_max_nodes: int = 5     # n! orders stays tractable up to here
+    rematch_iters: int = 6            # DP <-> sorted-rematch fixed point
+    local_swap_iters: int = 12        # pairwise-swap polish rounds
+    beam_width: int = 16
+    max_stages: Optional[int] = None  # cap on stage count (None: min(n, L))
+
+
+@dataclass
+class PlanResult:
+    """A solved joint plan: cut list, per-stage node ids, and the predicted
+    bottleneck under the planner's objective. ``mode`` records which search
+    produced it; ``dp_runs`` counts (order, DP) solves spent."""
+    cuts: List[int]
+    assignment: List[str]
+    bottleneck_ms: float
+    mode: str
+    dp_runs: int = 0
+    elapsed_ms: float = 0.0
+    node_idx: List[int] = field(default_factory=list)   # internal indices
+
+    @property
+    def stages(self) -> int:
+        """Number of pipeline stages in the plan."""
+        return len(self.cuts) - 1
+
+
+# --- full-plan evaluator (shared with the AdaptationController) --------------
+
+def _stage_ms(cost: float, ws: float, in_bytes: float,
+              profile: NodeProfile) -> float:
+    """One stage's period on one node: ``cost_model.execution_ms``
+    (single-threaded runtime, fixed overhead, memory-pressure
+    superlinearity) plus the incoming boundary transfer on this node's
+    link. ``_time_matrix`` is the vectorized mirror of this."""
+    return execution_ms(cost, profile, ws) + transfer_ms(in_bytes, profile)
+
+
+def bottleneck_ms(graph: ModelGraph, partitions, assignment: Dict[int, str],
+                  cluster, batch: int = 1, calibration: float = 1.0,
+                  speedup: float = 1.0) -> float:
+    """Steady-state period of an arbitrary (partitions, placement) pair:
+    max over nodes of that node's serialized stage time, each stage charged
+    its execution plus its incoming boundary transfer.
+
+    Stage costs are recomputed from the graph at the *current* calibration
+    (not the plan-time scale baked into ``Partition.cost``) so current and
+    candidate plans are always compared apples-to-apples. Any offline
+    placement node makes the plan unservable (``inf``). This is the single
+    objective the planner optimizes and the controller decides with.
+    """
+    scale = calibration * batch / speedup
+    per_node: Dict[str, float] = {}
+    for part in partitions:
+        node = cluster.nodes[assignment[part.index]]
+        if not node.online:
+            return math.inf
+        t = _stage_ms(partition_cost(graph, part.lo, part.hi) * scale,
+                      working_set_bytes(graph, part.lo, part.hi, batch),
+                      part.in_bytes * batch if part.lo > 0 else 0.0,
+                      node.profile)
+        per_node[node.node_id] = per_node.get(node.node_id, 0.0) + t
+    return max(per_node.values()) if per_node else math.inf
+
+
+# --- the planner -------------------------------------------------------------
+
+class PartitionPlanner:
+    """Joint (boundaries, assignment) search over one ``ModelGraph``.
+
+    One instance serves both initial deployment (``DistributedInference``)
+    and mid-run re-planning (``AdaptationController``); per-call state
+    (batch, calibration, opt-level speedup, live node set) is passed to
+    :meth:`plan`, so the instance only caches graph invariants.
+    """
+
+    def __init__(self, graph: ModelGraph,
+                 config: Optional[PlannerConfig] = None):
+        self.graph = graph
+        self.cfg = config or PlannerConfig()
+        L = len(graph.layers)
+        costs = np.array([l.cost for l in graph.layers], dtype=np.float64)
+        prefix = np.concatenate([[0.0], np.cumsum(costs)])
+        # stage_cost[a, b] = raw (uncalibrated) cost of layers [a, b)
+        self._stage_cost = prefix[None, :] - prefix[:, None]
+        pparams = np.concatenate(
+            [[0.0], np.cumsum([4.0 * l.params for l in graph.layers])])
+        self._params_mat = pparams[None, :] - pparams[:, None]
+        out_b = np.array([l.out_bytes for l in graph.layers], dtype=np.float64)
+        # peak activation over [a, b): running max from each start a
+        peak = np.zeros((L + 1, L + 1))
+        for a in range(L):
+            peak[a, a + 1:] = np.maximum.accumulate(out_b[a:])
+        self._peak_act = peak
+        self._in_bytes = np.array(
+            [0.0] + [graph.layers[c - 1].out_bytes
+                     + graph.layers[c - 1].state_bytes for c in range(1, L)]
+            + [0.0])
+        self._empty_mask = np.tril(np.ones((L + 1, L + 1), dtype=bool))
+        self._L = L
+
+    # --- per-(call, node) stage-time matrices --------------------------------
+
+    def _time_matrix(self, view: NodeView, batch: int,
+                     scale: float) -> np.ndarray:
+        """t[a, b] = stage period of layers [a, b) on this node, inf for
+        b <= a. Vectorized mirror of ``_stage_ms`` (test_planner pins the
+        two against each other so they cannot drift apart)."""
+        prof = view.profile
+        t = (self._stage_cost * scale
+             / (BASE_THROUGHPUT * min(prof.cpu, 1.0)) + FIXED_OVERHEAD_MS)
+        ws = self._params_mat + batch * self._peak_act
+        over = ws > prof.mem_bytes
+        if over.any():
+            # exponentiate only where over-limit (elsewhere ws can be the
+            # meaningless negative of an empty b < a range)
+            pressure = np.where(over, ws / prof.mem_bytes, 1.0)
+            t = t * pressure ** MEM_PRESSURE_ALPHA
+        in_b = self._in_bytes * batch
+        xfer = np.where(in_b > 0,
+                        prof.net_latency_ms
+                        + in_b * 8.0 / (prof.net_bw_mbps * 1e3), 0.0)
+        t = t + xfer[:, None]
+        return np.where(self._empty_mask, np.inf, t)
+
+    # --- DP over one node order ----------------------------------------------
+
+    def _dp_over_order(self, order: Sequence[int], tmats: List[np.ndarray]
+                       ) -> Tuple[float, List[int], List[int]]:
+        """Exact min-bottleneck for stages placed on an increasing
+        subsequence of ``order``; O(L^2) per node step. Returns
+        (bottleneck, cuts, node index per stage)."""
+        L = self._L
+        dp = np.full(L + 1, np.inf)
+        dp[0] = 0.0
+        rows = [dp]
+        for j in order:
+            stage_best = np.maximum(dp[:, None], tmats[j]).min(axis=0)
+            dp = np.minimum(dp, stage_best)
+            rows.append(dp)
+        bott = float(dp[L])
+        if not math.isfinite(bott):
+            return math.inf, [], []
+        # backtrack; prefer "skip node" on ties (fewer stages, less traffic)
+        cuts_rev: List[int] = [L]
+        nodes_rev: List[int] = []
+        l, j = L, len(order)
+        while l > 0:
+            assert j > 0, "backtrack fell off the node order"
+            prev = rows[j - 1]
+            if prev[l] <= rows[j][l] + _EPS:
+                j -= 1
+                continue
+            t = tmats[order[j - 1]]
+            a = int(np.argmin(np.maximum(prev[:l], t[:l, l])))
+            nodes_rev.append(order[j - 1])
+            cuts_rev.append(a)
+            l, j = a, j - 1
+        return bott, cuts_rev[::-1], nodes_rev[::-1]
+
+    # --- candidate node orders -----------------------------------------------
+
+    def _balanced_cuts(self, m: int,
+                       weights: Sequence[float]) -> Optional[List[int]]:
+        """Bottleneck-balanced m-way cuts for per-stage capability weights —
+        the shared ``partitioner.bottleneck_boundaries`` search. Only seeds
+        candidate orders, so it ignores overhead/transfer terms."""
+        return bottleneck_boundaries(np.diff(self._stage_cost[0]).tolist(),
+                                     m, weights)
+
+    def _rematch_order(self, cuts: List[int], node_idx: List[int],
+                       caps: List[float]) -> List[int]:
+        """Sorted matching — heaviest stage gets the most capable of the
+        chosen nodes — returned as the full node order induced along the
+        pipeline (unused nodes appended by capability)."""
+        m = len(cuts) - 1
+        stage_costs = [float(self._stage_cost[cuts[i], cuts[i + 1]])
+                       for i in range(m)]
+        by_cost = sorted(range(m), key=lambda i: -stage_costs[i])
+        by_cap = sorted(node_idx, key=lambda j: -caps[j])
+        slot = [0] * m
+        for rank, i in enumerate(by_cost):
+            slot[i] = by_cap[rank]
+        chosen = set(slot)
+        rest = sorted((j for j in range(len(caps)) if j not in chosen),
+                      key=lambda j: -caps[j])
+        return slot + rest
+
+    # --- public entry point --------------------------------------------------
+
+    def plan(self, views: Sequence[NodeView], batch: int = 1,
+             calibration: float = 1.0, speedup: float = 1.0,
+             mode: Optional[str] = None) -> Optional[PlanResult]:
+        """Solve (cuts, assignment) for the given live nodes.
+
+        Args:
+            views: live nodes (``node_views_from_stats`` / ``_from_cluster``).
+            batch / calibration / speedup: cost scaling, matching how the
+                pipeline charges stage execution.
+            mode: override the configured search mode for this call.
+        Returns:
+            ``PlanResult`` with node ids filled in, or None when no node has
+            capacity.
+        """
+        t_start = time.perf_counter()
+        views = [v for v in views if v.capability > 0.0]
+        if not views:
+            return None
+        mode = mode or self.cfg.mode
+        if mode == "auto":
+            mode = ("exhaustive"
+                    if len(views) <= self.cfg.exhaustive_max_nodes else "dp")
+        n = len(views)
+        # one contiguous stage per node bounds dp/exhaustive at n stages;
+        # the beam may reuse nodes, so it is only capped when configured
+        default_max = self._L if mode == "beam" else n
+        max_stages = min(self._L, self.cfg.max_stages or default_max)
+        scale = calibration * batch / speedup
+        tmats = [self._time_matrix(v, batch, scale) for v in views]
+        caps = [v.capability for v in views]
+
+        if mode == "beam":
+            res = self._beam(tmats, n, max_stages)
+        elif mode == "exhaustive":
+            res = self._search_orders(
+                itertools.permutations(range(n), max_stages), tmats, mode)
+        elif mode == "dp":
+            res = self._dp_candidates(tmats, caps, max_stages)
+        else:
+            raise ValueError(f"unknown planner mode: {mode}")
+        if res is None:
+            return None
+        res.assignment = [views[j].node_id for j in res.node_idx]
+        res.elapsed_ms = (time.perf_counter() - t_start) * 1e3
+        return res
+
+    # --- search drivers ------------------------------------------------------
+
+    def _search_orders(self, orders, tmats, mode) -> Optional[PlanResult]:
+        best = None
+        runs = 0
+        for order in orders:
+            runs += 1
+            bott, cuts, nidx = self._dp_over_order(list(order), tmats)
+            if cuts and (best is None or bott < best.bottleneck_ms - _EPS):
+                best = PlanResult(cuts, [], bott, mode, node_idx=nidx)
+        if best is not None:
+            best.dp_runs = runs
+        return best
+
+    def _dp_candidates(self, tmats, caps, max_stages) -> Optional[PlanResult]:
+        """Polynomial search: capability-sorted orders plus per-stage-count
+        rematch seeds, then DP <-> rematch iteration and pairwise-swap
+        polish — O(n) DP solves of O(L^2 n) each."""
+        n = len(caps)
+        desc = sorted(range(n), key=lambda j: -caps[j])
+        orders = [desc[:max_stages], desc[:max_stages][::-1]]
+        for m in range(1, max_stages + 1):
+            top = desc[:m]
+            cuts = self._balanced_cuts(m, [caps[j] for j in top])
+            if cuts is None:
+                continue
+            orders.append(self._rematch_order(cuts, top, caps)[:max_stages])
+        best = self._search_orders(orders, tmats, "dp")
+        if best is None:
+            return None
+        for _ in range(self.cfg.rematch_iters):
+            order = self._rematch_order(best.cuts, best.node_idx,
+                                        caps)[:max_stages]
+            bott, cuts, nidx = self._dp_over_order(order, tmats)
+            best.dp_runs += 1
+            if cuts and bott < best.bottleneck_ms - _EPS:
+                best = PlanResult(cuts, [], bott, "dp", best.dp_runs,
+                                  node_idx=nidx)
+            else:
+                break
+        return self._swap_polish(best, tmats, caps, max_stages)
+
+    def _swap_polish(self, best: PlanResult, tmats, caps,
+                     max_stages: int) -> PlanResult:
+        """Local search over assignment permutations the sorted rematch
+        cannot express (e.g. link-cost asymmetries): swap the bottleneck
+        stage's node with every alternative, keep improvements, and let the
+        DP re-optimize cuts on each improved order."""
+        n = len(caps)
+        for _ in range(self.cfg.local_swap_iters):
+            nidx = best.node_idx
+            m = len(nidx)
+            stage_t = [float(tmats[nidx[i]][best.cuts[i], best.cuts[i + 1]])
+                       for i in range(m)]
+            worst = max(range(m), key=lambda i: stage_t[i])
+            improved = False
+            for j in range(n):
+                trial = list(nidx)
+                if j in trial:
+                    k = trial.index(j)
+                    trial[worst], trial[k] = trial[k], trial[worst]
+                else:
+                    trial[worst] = j
+                if trial == nidx:
+                    continue
+                tt = max(float(tmats[trial[i]][best.cuts[i], best.cuts[i + 1]])
+                         for i in range(m))
+                if tt < best.bottleneck_ms - _EPS:
+                    chosen = set(trial)
+                    order = (trial + sorted(
+                        (q for q in range(n) if q not in chosen),
+                        key=lambda q: -caps[q]))[:max_stages]
+                    bott, cuts, nidx2 = self._dp_over_order(order, tmats)
+                    best.dp_runs += 1
+                    if cuts and bott < best.bottleneck_ms - _EPS:
+                        best = PlanResult(cuts, [], bott, "dp", best.dp_runs,
+                                          node_idx=nidx2)
+                        improved = True
+                        break
+            if not improved:
+                break
+        return best
+
+    # --- beam fallback (non-contiguous placements) ---------------------------
+
+    def _beam(self, tmats, n: int, max_stages: int) -> Optional[PlanResult]:
+        """Width-bounded left-to-right search that may give one node several
+        non-contiguous stages (their times add up on that node), capped at
+        ``max_stages`` stages total.
+
+        State: (bottleneck over closed stages, per-node busy times, start of
+        the open stage, node of the open stage, cuts, stage nodes). At each
+        boundary every beam state may cut and open a new stage on any node;
+        scoring includes the open stage so long cheap extensions are kept.
+        """
+        L = self._L
+        width = self.cfg.beam_width
+
+        def score(state, l):
+            bott, busy, a, jopen = state[0], state[1], state[2], state[3]
+            return max(bott, busy[jopen] + float(tmats[jopen][a, l]))
+
+        beam = [(0.0, tuple([0.0] * n), 0, j, (0,), (j,)) for j in range(n)]
+        for l in range(1, L):
+            nxt = list(beam)   # continue the open stage through layer l
+            for state in beam:
+                bott, busy, a, jopen, cuts, nodes = state
+                if len(nodes) >= max_stages:
+                    continue   # stage budget spent: extend only
+                t = float(tmats[jopen][a, l])
+                nb = list(busy)
+                nb[jopen] += t
+                closed = max(bott, nb[jopen])
+                for j in range(n):   # cut at l, open next stage on node j
+                    nxt.append((closed, tuple(nb), l, j,
+                                cuts + (l,), nodes + (j,)))
+            nxt.sort(key=lambda s: (score(s, min(l + 1, L)), len(s[5])))
+            beam = nxt[:width]
+        best = min(beam, key=lambda s: score(s, L))
+        final = score(best, L)
+        if not math.isfinite(final):
+            return None
+        return PlanResult(list(best[4]) + [L], [], final, "beam",
+                          node_idx=list(best[5]))

@@ -28,6 +28,8 @@ HISTORY_LEN = 32
 
 @dataclass
 class TaskRequirements:
+    """Resource demand of one task, checked against node availability in
+    Alg. 1's eligibility filter."""
     cpu: float = 0.1
     mem_mb: float = 64.0
     priority: int = 0
@@ -35,6 +37,8 @@ class TaskRequirements:
 
 @dataclass
 class NodeScore:
+    """Per-node Eq. 4 score breakdown; ``skipped`` carries the Alg. 1
+    exclusion reason when the node was filtered before scoring."""
     node_id: str
     resource: float
     load: float
@@ -45,6 +49,10 @@ class NodeScore:
 
 
 class TaskScheduler:
+    """Node Selection Algorithm (paper Alg. 1): weighted Eq. 4 scoring over
+    live ``NodeStats``, plus the execution-history feedback that both the
+    S_P score and the planner's capability de-rating consume."""
+
     def __init__(self, weights: Optional[Dict[str, float]] = None,
                  load_threshold: float = LOAD_SKIP_THRESHOLD,
                  latency_threshold_ms: float = LATENCY_SKIP_MS):
@@ -53,6 +61,7 @@ class TaskScheduler:
         self.load_threshold = load_threshold
         self.latency_threshold_ms = latency_threshold_ms
         self.exec_history: Dict[str, List[float]] = {}
+        self.perf_ratios: Dict[str, List[float]] = {}   # observed / predicted
         self.task_counts: Dict[str, int] = {}
         self.skip_counts: Dict[str, int] = {}
         self.decisions = 0
@@ -86,6 +95,8 @@ class TaskScheduler:
 
     def score_nodes(self, nodes: List[NodeStats],
                     req: TaskRequirements) -> List[NodeScore]:
+        """Score every node per Eq. 4-8, applying Alg. 1 lines 4-9 skip
+        rules (offline / overloaded / high-latency / insufficient)."""
         out = []
         for n in nodes:
             if not n.online:
@@ -114,6 +125,9 @@ class TaskScheduler:
 
     def select_node(self, nodes: List[NodeStats],
                     req: Optional[TaskRequirements] = None) -> Optional[str]:
+        """Pick the highest-scoring eligible node for a task (Alg. 1);
+        returns None when every node is skipped. Charges the paper's 10 ms
+        decision overhead and bumps the winner's queue count."""
         req = req or TaskRequirements()
         self.decisions += 1
         self.overhead_ms += SCHEDULING_OVERHEAD_MS
@@ -129,16 +143,45 @@ class TaskScheduler:
 
     # --- history feedback -------------------------------------------------------
 
-    def task_completed(self, node_id: str, exec_ms: float) -> None:
+    def task_completed(self, node_id: str, exec_ms: float,
+                       predicted_ms: Optional[float] = None) -> None:
+        """Feed one finished task back into the performance history and
+        free the node's queue slot. With ``predicted_ms`` (the cost-model
+        expectation for that task on that node), the observed/predicted
+        ratio also feeds :meth:`perf_weight`."""
         h = self.exec_history.setdefault(node_id, [])
         h.append(exec_ms)
         if len(h) > HISTORY_LEN:
             h.pop(0)
+        if predicted_ms is not None and predicted_ms > 0:
+            r = self.perf_ratios.setdefault(node_id, [])
+            r.append(exec_ms / predicted_ms)
+            if len(r) > HISTORY_LEN:
+                r.pop(0)
         # recalibrate node load: a completed task frees a slot
         if self.task_counts.get(node_id, 0) > 0:
             self.task_counts[node_id] -= 1
 
+    def perf_weight(self, node_id: str) -> float:
+        """Multiplicative capability de-rating for the partition planner:
+        the inverse of the node's average observed/predicted execution
+        ratio, clamped to [0.5, 1.5]. Model-normalized on purpose — a slow
+        node whose slowness the cost model already captures is NOT
+        penalized; only unmodeled deviation (a node running hotter than
+        its profile predicts) moves the weight. 1.0 with no ratio history
+        — this is the paper's historical-performance signal (S_P) reaching
+        the planner instead of only per-task routing."""
+        ratios = self.perf_ratios.get(node_id)
+        if not ratios:
+            return 1.0
+        avg = sum(ratios) / len(ratios)
+        if avg <= 0:
+            return 1.0
+        return min(1.5, max(0.5, 1.0 / avg))
+
     def metrics(self) -> dict:
+        """Aggregate scheduler telemetry: decision count/overhead, queue
+        lengths, skip reasons, and per-node average execution times."""
         return dict(
             decisions=self.decisions,
             overhead_ms=self.overhead_ms,

@@ -1,0 +1,19 @@
+"""Docstring gate: every public symbol in ``repro.core`` is documented.
+
+Registers ``scripts/check_docs.py`` as a tier-1 test so doc rot fails the
+suite the same way a behavioral regression would.
+"""
+
+import importlib.util
+import pathlib
+
+_SCRIPT = pathlib.Path(__file__).resolve().parents[1] / "scripts" / "check_docs.py"
+_spec = importlib.util.spec_from_file_location("check_docs", _SCRIPT)
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_core_public_api_documented():
+    report = check_docs.check_package("repro.core")
+    assert not report, (
+        "public symbols missing docstrings:\n  " + "\n  ".join(report))

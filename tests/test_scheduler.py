@@ -156,3 +156,23 @@ def test_overhead_accounting():
     m = s.metrics()
     assert m["decisions"] == 5
     assert m["avg_overhead_ms"] == pytest.approx(10.0)   # paper Table I
+
+
+def test_perf_weight_model_normalized():
+    """perf_weight de-rates only unmodeled deviation: observed == predicted
+    keeps weight 1.0 regardless of absolute speed; running hot vs the model
+    de-rates (clamped), running cool boosts (clamped)."""
+    s = TaskScheduler()
+    assert s.perf_weight("unseen") == 1.0
+    for _ in range(4):                       # slow node, perfectly modeled
+        s.task_completed("slow-ok", 500.0, predicted_ms=500.0)
+    assert s.perf_weight("slow-ok") == pytest.approx(1.0)
+    for _ in range(4):                       # 2x hotter than the model
+        s.task_completed("hot", 200.0, predicted_ms=100.0)
+    assert s.perf_weight("hot") == pytest.approx(0.5)
+    for _ in range(4):                       # 4x cooler, clamped at 1.5
+        s.task_completed("cool", 25.0, predicted_ms=100.0)
+    assert s.perf_weight("cool") == pytest.approx(1.5)
+    # legacy call without predicted_ms records no ratio
+    s.task_completed("plain", 123.0)
+    assert s.perf_weight("plain") == 1.0
