@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Perf-regression gate for the pipeline engine.
+
+Re-runs ``benchmarks/pipeline_bench.py`` in a reduced configuration (the
+scale section shrunk to 20k requests; the Table-I and transfer-mode
+sections are cheap and run at full size) and compares against the
+committed ``BENCH_pipeline.json`` baseline:
+
+* **Simulated metrics** (``table1`` + ``modes`` sections, and the stage
+  count of the scale plans) must match the baseline exactly — the
+  discrete-event simulation is bit-reproducible, so any difference is a
+  timing-model or engine drift, not noise.
+* **Wall-clock rate** (``sim_req_per_wall_s`` of the scale section) must
+  stay above ``WALL_RATE_TOLERANCE`` × baseline — a wide band, because
+  absolute wall time varies by machine; the gate catches order-of-magnitude
+  hot-path regressions (e.g. reintroducing per-request O(layers) work),
+  not scheduler jitter.
+
+Registered as the non-tier-1 ``perf`` pytest marker via
+``tests/test_perf.py`` (the default suite deselects it; run with
+``pytest -m perf``).
+
+Run standalone:  PYTHONPATH=src python scripts/check_perf.py
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+import sys
+from typing import List
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+BASELINE_PATH = REPO / "BENCH_pipeline.json"
+BENCH_PATH = REPO / "benchmarks" / "pipeline_bench.py"
+
+#: reduced scale-section size for the gate (full bench uses 100k)
+REDUCED_SCALE_REQUESTS = 20_000
+#: current wall rate must exceed this fraction of the committed baseline
+WALL_RATE_TOLERANCE = 0.25
+#: scale-section fields that depend on stream length or wall clock — not
+#: compared exactly (the wall rate has its own tolerance band above)
+SCALE_VOLATILE_FIELDS = {"num_requests", "wall_s", "sim_req_per_wall_s",
+                         "tail_throughput_rps", "sim_makespan_s"}
+
+
+def _load_bench():
+    spec = importlib.util.spec_from_file_location("pipeline_bench",
+                                                  BENCH_PATH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def check(baseline_path: pathlib.Path = BASELINE_PATH,
+          scale_requests: int = REDUCED_SCALE_REQUESTS) -> List[str]:
+    """Run the reduced benchmark and diff it against the committed
+    baseline; returns one line per problem (empty list == clean)."""
+    if not baseline_path.exists():
+        return [f"missing baseline {baseline_path} — run "
+                f"benchmarks/pipeline_bench.py to create it"]
+    baseline = json.loads(baseline_path.read_text())
+    # budget_s=None: wall-time enforcement here is the tolerance band
+    # below, which *reports* on slow machines instead of crashing mid-bench
+    current = _load_bench().run(scale_requests=scale_requests, write=False,
+                                budget_s=None)
+    problems: List[str] = []
+
+    for section in ("table1", "modes", "scale"):
+        if len(current.get(section, [])) != len(baseline[section]):
+            problems.append(
+                f"{section}: {len(current.get(section, []))} row(s), "
+                f"baseline has {len(baseline[section])} — configuration "
+                f"coverage changed")
+
+    for section in ("table1", "modes"):
+        for brow, crow in zip(baseline[section], current[section]):
+            cfg = brow.get("config", "?")
+            for k, v in brow.items():
+                if crow.get(k) != v:
+                    problems.append(
+                        f"{section}/{cfg}: {k} = {crow.get(k)!r}, "
+                        f"baseline {v!r} (simulated metric drifted)")
+
+    for brow, crow in zip(baseline["scale"], current["scale"]):
+        cfg = brow.get("config", "?")
+        for k, v in brow.items():
+            if k in SCALE_VOLATILE_FIELDS:
+                continue
+            if crow.get(k) != v:
+                problems.append(f"scale/{cfg}: {k} = {crow.get(k)!r}, "
+                                f"baseline {v!r}")
+        floor = brow["sim_req_per_wall_s"] * WALL_RATE_TOLERANCE
+        if crow["sim_req_per_wall_s"] < floor:
+            problems.append(
+                f"scale/{cfg}: {crow['sim_req_per_wall_s']:.0f} "
+                f"sim-req/wall-s < {floor:.0f} "
+                f"({WALL_RATE_TOLERANCE:.0%} of baseline "
+                f"{brow['sim_req_per_wall_s']:.0f}) — hot-path regression")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    for line in problems:
+        print(line)
+    if problems:
+        print(f"\n{len(problems)} perf-gate problem(s)", file=sys.stderr)
+        return 1
+    print("perf gate clean: simulated metrics match baseline, "
+          "wall rate within band")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

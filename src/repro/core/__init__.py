@@ -9,8 +9,10 @@ Components (paper §III):
      partitioner -> deployer loop: live re-partitioning on drift)
 
 plus the simulated heterogeneous cluster (repro.core.cluster), the
-calibrated cost/timing model (repro.core.cost_model) and the end-to-end
-pipeline runtime (repro.core.pipeline).
+calibrated cost/timing model (repro.core.cost_model), the end-to-end
+pipeline runtime (repro.core.pipeline), and the event-driven request
+engine (repro.core.engine: overlapped transfers, micro-batching, 100k+
+request streams).
 """
 
 from repro.core.adaptation import (AdaptationConfig, AdaptationController,
@@ -21,6 +23,7 @@ from repro.core.cluster import (EdgeCluster, EdgeNode, make_paper_cluster,
                                 make_synthetic_cluster)
 from repro.core.cost_model import NodeProfile, PROFILES
 from repro.core.deployer import ModelDeployer
+from repro.core.engine import EngineConfig, PipelineEngine
 from repro.core.monitor import NodeStats, ResourceMonitor
 from repro.core.partitioner import ModelPartitioner, Partition, PartitionPlan
 from repro.core.pipeline import DistributedInference, RunReport, run_monolithic
@@ -34,6 +37,7 @@ __all__ = [
     "cpu_throttle", "latency_spike", "node_death", "node_recovery",
     "ResultCache", "EdgeCluster", "EdgeNode", "make_paper_cluster",
     "make_synthetic_cluster", "NodeProfile", "PROFILES", "ModelDeployer",
+    "EngineConfig", "PipelineEngine",
     "NodeStats", "ResourceMonitor", "ModelPartitioner", "Partition",
     "PartitionPlan", "DistributedInference", "RunReport", "run_monolithic",
     "NodeView", "PartitionPlanner", "PlannerConfig", "PlanResult",

@@ -152,6 +152,7 @@ class AdaptationController:
         self.events: List[AdaptationEvent] = []
         self.migrations = 0
         self.decisions = 0
+        self.engine_events: Dict[str, int] = {}   # on_engine_event kinds
         self._last_eval_ms = -math.inf
         self._last_migration_ms = -math.inf
         self._last_skipped_drifts: Optional[tuple] = None
@@ -316,6 +317,21 @@ class AdaptationController:
                       migration_cost_ms=round(decision.migration_cost_ms, 2),
                       transfer_charged_ms=round(transfer_cost, 2)))
 
+    def on_engine_event(self, kind: str,
+                        force_poll: bool = False) -> Optional[MigrationDecision]:
+        """Control-loop entry point for the event engine: invoked at
+        simulated-time engine events — monitor poll ticks, scenario
+        mutations, failed dispatches — rather than at request submit
+        boundaries (the legacy loop's cadence). ``kind`` names the
+        triggering event (``poll`` / ``scenario`` / ``dispatch-failed``)
+        and is tallied into ``engine_events`` (surfaced by
+        :meth:`summary`); ``force_poll`` refreshes telemetry immediately
+        for events that must not wait out the poll interval. Delegates to
+        :meth:`maybe_adapt`, so the decision logic is identical on both
+        cadences."""
+        self.engine_events[kind] = self.engine_events.get(kind, 0) + 1
+        return self.maybe_adapt(force_poll=force_poll)
+
     def maybe_adapt(self, force_poll: bool = False) -> Optional[MigrationDecision]:
         """One full control-loop step: evaluate drift and apply the migration
         if the decision says so. Returns the decision, or None when no fresh
@@ -352,6 +368,7 @@ class AdaptationController:
         return dict(
             migrations=self.migrations,
             decisions=self.decisions,
+            engine_events=dict(self.engine_events),
             events=[str(e) for e in self.events],
         )
 

@@ -3,6 +3,12 @@
 LRU keyed by (model, partition, input digest). A hit skips both the
 partition's compute and the boundary transfer — the mechanism behind the
 paper's "network bandwidth reduced to zero" row in Table I.
+
+Entries carry the *actual stage output* (a real activation on the executor
+path, a stage descriptor on the simulated path) plus the boundary bytes the
+entry saves per hit; the byte credit is recorded at :meth:`ResultCache.put`
+and paid out automatically on every :meth:`ResultCache.get` hit, so callers
+cannot forget (or double-count) the Table-I network-savings accounting.
 """
 
 from __future__ import annotations
@@ -13,20 +19,57 @@ from typing import Any, Optional, Tuple
 
 import numpy as np
 
+#: fallback (signature -> digest) map for standalone digest() calls;
+#: pipeline paths pass their own ``ResultCache.digest_memo`` so signature
+#: tokens are scoped to the cache whose caller can guarantee the contract.
+_DIGEST_MEMO: "OrderedDict[Any, str]" = OrderedDict()
+_DIGEST_MEMO_CAPACITY = 1024
 
-def digest(x) -> str:
-    """Stable short hash of an input array (the cache's request signature)."""
+
+def digest(x, signature=None, memo: "Optional[OrderedDict]" = None) -> str:
+    """Stable short hash of an input array (the cache's request signature).
+
+    ``signature``: optional hashable token identifying the input pattern
+    (e.g. the request stream's ``pattern-3``). When given, the sha1 is
+    memoized per signature — repeated requests of a known pattern skip the
+    array hash entirely, which is the dominant cache-lookup cost for large
+    activations. ``memo``: the memo table to use (a ``ResultCache`` passes
+    its own ``digest_memo``, scoping tokens to that cache); defaults to a
+    process-wide table for standalone calls.
+
+    **Contract:** passing a signature asserts that every input carrying it
+    is byte-identical within the memo's scope; the memo answers *for the
+    signature*, not the array, so reusing a token for a different input
+    silently yields the first input's digest (and downstream, its cached
+    activations). Omit the signature when that binding cannot be
+    guaranteed.
+    """
+    if memo is None:
+        memo = _DIGEST_MEMO
+    if signature is not None:
+        d = memo.get(signature)
+        if d is not None:
+            memo.move_to_end(signature)
+            return d
     arr = np.asarray(x)
-    return hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
+    d = hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
+    if signature is not None:
+        memo[signature] = d
+        if len(memo) > _DIGEST_MEMO_CAPACITY:
+            memo.popitem(last=False)
+    return d
 
 
 class ResultCache:
     """LRU result cache keyed by (model, partition layer range, input
-    digest); a hit skips the partition's compute and boundary transfer."""
+    digest); a hit returns the stored stage output, skips the partition's
+    compute and boundary transfer, and credits the entry's recorded
+    transfer bytes to the savings counter."""
 
     def __init__(self, capacity: int = 256):
         self.capacity = capacity
-        self._store: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self._store: "OrderedDict[Tuple, Tuple[Any, float]]" = OrderedDict()
+        self.digest_memo: "OrderedDict[Any, str]" = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.bytes_saved = 0.0
@@ -39,27 +82,25 @@ class ResultCache:
         return (model, part_range, input_digest)
 
     def get(self, key: Tuple) -> Optional[Any]:
-        """Look up a cached result; counts the hit/miss and refreshes LRU
-        recency on hit."""
-        if key in self._store:
+        """Look up a cached stage output; counts the hit/miss, refreshes LRU
+        recency, and credits the boundary bytes recorded at :meth:`put`."""
+        entry = self._store.get(key)
+        if entry is not None:
             self._store.move_to_end(key)
             self.hits += 1
-            return self._store[key]
+            self.bytes_saved += entry[1]
+            return entry[0]
         self.misses += 1
         return None
 
     def put(self, key: Tuple, value: Any, transfer_bytes: float = 0.0) -> None:
-        """Insert a result, evicting the least-recently-used entry at
-        capacity."""
-        self._store[key] = value
+        """Insert a stage output, evicting the least-recently-used entry at
+        capacity. ``transfer_bytes`` records the boundary bytes every future
+        hit on this entry avoids (Table I's network-bandwidth row)."""
+        self._store[key] = (value, transfer_bytes)
         self._store.move_to_end(key)
         if len(self._store) > self.capacity:
             self._store.popitem(last=False)
-
-    def credit_saved(self, num_bytes: float) -> None:
-        """Record boundary-transfer bytes a hit avoided (Table I's
-        network-bandwidth row)."""
-        self.bytes_saved += num_bytes
 
     @property
     def hit_rate(self) -> float:

@@ -15,10 +15,16 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import random
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.cost_model import NodeProfile, PROFILES, execution_ms, transfer_ms
+
+#: how many recent execution durations each node retains for the monitor's
+#: stability score (mirrors the seed's ``history[-8:]`` window without
+#: requiring unbounded ``TaskRecord`` growth on the engine's hot path).
+RECENT_EXEC_WINDOW = 8
 
 
 class SimClock:
@@ -60,9 +66,16 @@ class EdgeNode:
         self.active_tasks = 0
         self.mem_used_bytes = 0.0      # deployed partitions
         self.history: List[TaskRecord] = []
+        self.recent_exec: deque = deque(maxlen=RECENT_EXEC_WINDOW)
         self.net_rx_bytes = 0.0
         self.net_tx_bytes = 0.0
         self.cpu_busy_ms = 0.0         # integral of busy time (for CPU%)
+        # engine state: per-node FIFO of queued stage work, the busy flag of
+        # the in-progress execution, and the async transmit-link availability
+        # (core.engine's overlap transfer channel)
+        self.pending: deque = deque()
+        self.engine_busy = False
+        self.tx_free_ms = 0.0
 
     # --- telemetry (consumed by the Resource Monitor) ---
 
@@ -94,6 +107,7 @@ class EdgeNode:
         self.busy_until_ms = rec.end_ms
         self.cpu_busy_ms += dur
         self.history.append(rec)
+        self.recent_exec.append(dur)
         self.task_count += 1
         return rec
 
@@ -116,6 +130,26 @@ class EdgeCluster:
         self.nodes: Dict[str, EdgeNode] = {}
         self._task_ids = itertools.count()
         self.events: List[str] = []
+        self._listeners: List[Callable[[str, str], None]] = []
+
+    # --- event hooks ------------------------------------------------------
+
+    def subscribe(self, listener: Callable[[str, str], None]) -> None:
+        """Register a ``listener(kind, node_id)`` called on every cluster
+        mutation (``join`` / ``offline`` / ``recover`` / ``profile``) — the
+        invalidation hook the pipeline engine uses to drop cached per-plan
+        timing tables the instant the hardware they describe changes."""
+        self._listeners.append(listener)
+
+    def unsubscribe(self, listener: Callable[[str, str], None]) -> None:
+        """Remove a listener registered with :meth:`subscribe` (no-op when
+        absent, so teardown paths can call it unconditionally)."""
+        if listener in self._listeners:
+            self._listeners.remove(listener)
+
+    def _notify(self, kind: str, node_id: str) -> None:
+        for fn in list(self._listeners):
+            fn(kind, node_id)
 
     # --- membership -------------------------------------------------------
 
@@ -128,6 +162,7 @@ class EdgeCluster:
         self.nodes[node_id] = node
         self.events.append(f"[{self.clock.now_ms:9.1f}ms] join   {node_id} "
                            f"(cpu={profile.cpu}, mem={profile.mem_mb}MB)")
+        self._notify("join", node_id)
         return node
 
     def remove_node(self, node_id: str) -> None:
@@ -135,6 +170,7 @@ class EdgeCluster:
         node = self.nodes[node_id]
         node.online = False
         self.events.append(f"[{self.clock.now_ms:9.1f}ms] offline {node_id}")
+        self._notify("offline", node_id)
 
     def restore_node(self, node_id: str) -> EdgeNode:
         """Bring a previously-offline node back (the paper's recovery event)."""
@@ -142,6 +178,7 @@ class EdgeCluster:
         node.online = True
         node.busy_until_ms = max(node.busy_until_ms, self.clock.now_ms)
         self.events.append(f"[{self.clock.now_ms:9.1f}ms] recover {node_id}")
+        self._notify("recover", node_id)
         return node
 
     def set_profile(self, node_id: str, **changes) -> EdgeNode:
@@ -151,6 +188,7 @@ class EdgeCluster:
         node.profile = dataclasses.replace(node.profile, **changes)
         desc = ", ".join(f"{k}={v}" for k, v in changes.items())
         self.events.append(f"[{self.clock.now_ms:9.1f}ms] profile {node_id} ({desc})")
+        self._notify("profile", node_id)
         return node
 
     def online_nodes(self) -> List[EdgeNode]:

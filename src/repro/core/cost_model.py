@@ -17,7 +17,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import List, Sequence, Tuple
+
+import numpy as np
 
 from repro.models.graph import LayerSpec, ModelGraph
 
@@ -82,6 +85,51 @@ def transfer_ms(num_bytes: float, profile: NodeProfile) -> float:
     if num_bytes <= 0:
         return 0.0
     return profile.net_latency_ms + num_bytes * 8.0 / (profile.net_bw_mbps * 1e3)
+
+
+# --- cached / vectorized entry points (the engine's hot-path mirrors) --------
+
+@lru_cache(maxsize=65536)
+def execution_ms_cached(cost: float, profile: NodeProfile,
+                        working_set_bytes: float = 0.0,
+                        threads: float = 1.0) -> float:
+    """Memoized :func:`execution_ms` (``NodeProfile`` is frozen, hence
+    hashable). The pipeline engine's per-plan ``StageTable`` is rebuilt on
+    every re-deploy / migration / profile change; identical (cost, profile,
+    working-set) keys recur constantly across rebuilds, so this keeps table
+    construction O(1) per stage after the first run. Delegates to the scalar
+    model, so the cached and uncached paths cannot drift apart."""
+    return execution_ms(cost, profile, working_set_bytes, threads=threads)
+
+
+@lru_cache(maxsize=65536)
+def transfer_ms_cached(num_bytes: float, profile: NodeProfile) -> float:
+    """Memoized :func:`transfer_ms` — same rationale (and same exact float
+    result) as :func:`execution_ms_cached`, for boundary transfers."""
+    return transfer_ms(num_bytes, profile)
+
+
+def execution_ms_vec(costs, profile: NodeProfile, working_sets=0.0,
+                     threads: float = 1.0):
+    """Vectorized :func:`execution_ms` over arrays of (cost, working-set)
+    pairs for one node profile; returns an ``np.ndarray`` of stage times.
+
+    The element-wise math mirrors the scalar model term for term (CPU share,
+    fixed per-inference overhead, superlinear memory pressure);
+    ``tests/test_engine.py`` pins it element-wise against the scalar model
+    so the two cannot drift. Used by ``benchmarks/pipeline_bench.py`` to
+    sweep the analytic micro-batch amortization curve without a Python loop.
+    """
+    costs = np.asarray(costs, dtype=np.float64)
+    ws = np.broadcast_to(np.asarray(working_sets, dtype=np.float64),
+                         costs.shape)
+    eff_cpu = min(profile.cpu, threads)
+    t = costs / (BASE_THROUGHPUT * eff_cpu) + FIXED_OVERHEAD_MS
+    over = ws > profile.mem_bytes
+    if over.any():
+        pressure = np.where(over, ws / profile.mem_bytes, 1.0)
+        t = t * pressure ** MEM_PRESSURE_ALPHA
+    return t
 
 
 def partition_cost(graph: ModelGraph, lo: int, hi: int) -> float:

@@ -178,17 +178,36 @@ class ModelDeployer:
     # --- failure recovery / elasticity --------------------------------------
 
     def handle_node_offline(self, node_id: str) -> List[int]:
-        """Redeploy partitions that lived on a now-offline node."""
+        """Redeploy partitions that lived on a now-offline node.
+
+        The replacement is the most *capable* online node with memory
+        headroom (``NodeStats.capability`` — the same live signal the
+        planner ranks by), not an NSA ``select_node`` call: the NSA's
+        balance/history terms drift with how often request accounting has
+        ticked, which would make mid-run failure recovery depend on the
+        caller's bookkeeping cadence instead of on cluster state. Memory
+        committed to earlier redeploys in this same recovery is tracked
+        explicitly (the monitor snapshot is from before the loop), so a
+        multi-partition node death cannot overcommit one survivor.
+        """
         self.monitor.poll(force=True)   # don't route on a stale snapshot
         moved = []
+        committed_mb: Dict[str, float] = {}
         for i, d in list(self.deployments.items()):
             if d.active and d.node_id == node_id:
                 self.undeploy(i)
                 stats = self.monitor.online_stats()
-                req = TaskRequirements(cpu=0.1, mem_mb=self._mem_req_mb(d.partition))
-                new_node = self.scheduler.select_node(stats, req)
-                if new_node is None:
+                mem_req = self._mem_req_mb(d.partition)
+                eligible = [
+                    s for s in stats
+                    if s.mem_avail_mb - committed_mb.get(s.node_id, 0.0)
+                    >= mem_req and s.cpu_avail > 0]
+                if not eligible:
                     raise RuntimeError("no capacity to redeploy partition %d" % i)
+                new_node = max(eligible,
+                               key=lambda s: (s.capability, s.node_id)).node_id
+                committed_mb[new_node] = (committed_mb.get(new_node, 0.0)
+                                          + mem_req)
                 node = self.cluster.nodes[new_node]
                 shrink = OPT_LEVELS[self.opt_level][1]
                 t = node.receive(d.partition.params_bytes * shrink)

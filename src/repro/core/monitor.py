@@ -101,11 +101,14 @@ class ResourceMonitor:
 
     def _stat(self, node: EdgeNode, window_ms: float) -> NodeStats:
         prof = node.profile
-        # stability: penalize recent saturation and offline flaps
-        recent = node.history[-8:]
+        # stability: penalize recent saturation and offline flaps. Reads the
+        # node's bounded recent-execution window (fed by both EdgeNode.execute
+        # and the pipeline engine's fast path) rather than the unbounded
+        # TaskRecord history, so 100k-request streams stay memory-flat.
+        recent = node.recent_exec
         stab = 1.0
         if recent:
-            over = sum(1 for r in recent if r.exec_ms > 2000.0)
+            over = sum(1 for dur in recent if dur > 2000.0)
             stab = max(0.0, 1.0 - 0.05 * over)
         if not node.online:
             stab = 0.0

@@ -131,6 +131,7 @@ class ModelPartitioner:
     def __init__(self, graph: ModelGraph):
         self.graph = graph
         self._calibration = 1.0
+        self._ws_cache: dict = {}     # (lo, hi, batch) -> working-set bytes
 
     # --- B1/B2 --------------------------------------------------------------
 
@@ -292,5 +293,13 @@ class ModelPartitioner:
 
     def working_set(self, part: Partition, batch: int = 1) -> float:
         """Params + peak activation bytes for one partition at ``batch`` —
-        the memory-pressure input to ``cost_model.execution_ms``."""
-        return working_set_bytes(self.graph, part.lo, part.hi, batch)
+        the memory-pressure input to ``cost_model.execution_ms``. Memoized
+        per (layer range, batch): the graph is immutable, so the O(layers)
+        scan runs once per distinct partition instead of once per request
+        (the seed re-derived it on every request × stage)."""
+        key = (part.lo, part.hi, batch)
+        ws = self._ws_cache.get(key)
+        if ws is None:
+            ws = working_set_bytes(self.graph, part.lo, part.hi, batch)
+            self._ws_cache[key] = ws
+        return ws

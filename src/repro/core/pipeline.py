@@ -11,13 +11,21 @@ so consecutive requests pipeline across stages, and per-request latency =
 last stage end - submit time. The monolithic baseline is the same machinery
 with one partition on one node (single-threaded runtime, as in the paper's
 PyTorch container).
+
+Request streams are driven by ``core.engine.PipelineEngine``: the default
+configuration reproduces the seed loop's timing bit-for-bit at a fraction of
+the per-request cost (precomputed stage tables, poll-granular accounting,
+numpy metric columns), while ``EngineConfig(transfer="overlap",
+micro_batch=k)`` unlocks DEFER-style transfer/compute overlap and
+stage-level micro-batching. The seed loop itself is kept reachable as
+:meth:`DistributedInference.run_legacy` — the parity oracle.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import statistics
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -53,53 +61,156 @@ class RequestMetrics:
         return self.finish_ms - self.submit_ms
 
 
-@dataclass
+class RequestColumns:
+    """Preallocated numpy per-request metric columns.
+
+    The seed grew a Python list of ``RequestMetrics`` objects per run —
+    ~200 bytes and an allocation per request, which dominates at 100k+
+    request streams. The engine writes six flat columns instead; the
+    object view is materialized lazily only if a caller actually asks for
+    ``RunReport.requests``.
+    """
+
+    __slots__ = ("submit_ms", "finish_ms", "comm_ms", "service_ms",
+                 "cache_hits", "stages")
+
+    def __init__(self, n: int):
+        self.submit_ms = np.zeros(n, dtype=np.float64)
+        self.finish_ms = np.zeros(n, dtype=np.float64)
+        self.comm_ms = np.zeros(n, dtype=np.float64)
+        self.service_ms = np.zeros(n, dtype=np.float64)
+        self.cache_hits = np.zeros(n, dtype=np.int64)
+        self.stages = np.zeros(n, dtype=np.int64)
+
+    def __len__(self) -> int:
+        return len(self.submit_ms)
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[RequestMetrics]
+                      ) -> "RequestColumns":
+        """Column view of an existing ``RequestMetrics`` list (bridges the
+        legacy loop / task-parallel constructors into the vectorized
+        report path)."""
+        cols = cls(len(requests))
+        for i, r in enumerate(requests):
+            cols.submit_ms[i] = r.submit_ms
+            cols.finish_ms[i] = r.finish_ms
+            cols.comm_ms[i] = r.comm_ms
+            cols.service_ms[i] = r.service_ms
+            cols.cache_hits[i] = r.cache_hits
+            cols.stages[i] = r.stages
+        return cols
+
+    def materialize(self) -> List[RequestMetrics]:
+        """Expand the columns back into per-request objects (lazy; only on
+        explicit ``RunReport.requests`` access)."""
+        return [RequestMetrics(i, float(self.submit_ms[i]),
+                               float(self.finish_ms[i]),
+                               float(self.comm_ms[i]),
+                               int(self.cache_hits[i]), int(self.stages[i]),
+                               float(self.service_ms[i]))
+                for i in range(len(self.submit_ms))]
+
+
 class RunReport:
     """Aggregate metrics of one request-stream run (the paper's Table I
-    columns, plus adaptation events when a controller is attached)."""
-    name: str
-    requests: List[RequestMetrics]
-    network_bytes: float
-    scheduling_overhead_ms: float
-    monitor_overhead_pct: float
-    stability: float
-    mem_used_mb: float
-    cpu_pct: float
-    cache_stats: Optional[dict] = None
-    adaptation: Optional[dict] = None   # AdaptationController.summary()
+    columns, plus adaptation events when a controller is attached).
+
+    Backed either by preallocated :class:`RequestColumns` (the engine path;
+    aggregates are vectorized numpy reductions) or by a ``RequestMetrics``
+    list (the legacy loop and task-parallel constructors). Both views are
+    always available: ``columns`` / ``requests`` convert lazily.
+    """
+
+    def __init__(self, name: str,
+                 requests: Optional[List[RequestMetrics]] = None,
+                 columns: Optional[RequestColumns] = None,
+                 network_bytes: float = 0.0,
+                 scheduling_overhead_ms: float = 0.0,
+                 monitor_overhead_pct: float = 0.0,
+                 stability: float = 0.0, mem_used_mb: float = 0.0,
+                 cpu_pct: float = 0.0, cache_stats: Optional[dict] = None,
+                 adaptation: Optional[dict] = None):
+        assert requests is not None or columns is not None
+        self.name = name
+        self._requests = requests
+        self._columns = columns
+        self.network_bytes = network_bytes
+        self.scheduling_overhead_ms = scheduling_overhead_ms
+        self.monitor_overhead_pct = monitor_overhead_pct
+        self.stability = stability
+        self.mem_used_mb = mem_used_mb
+        self.cpu_pct = cpu_pct
+        self.cache_stats = cache_stats
+        self.adaptation = adaptation   # AdaptationController.summary()
+
+    @property
+    def requests(self) -> List[RequestMetrics]:
+        """Per-request metric objects (materialized lazily from the numpy
+        columns on first access)."""
+        if self._requests is None:
+            self._requests = self._columns.materialize()
+        return self._requests
+
+    @property
+    def columns(self) -> RequestColumns:
+        """Numpy column view of the per-request metrics (built lazily from
+        the object list for legacy-constructed reports)."""
+        if self._columns is None:
+            self._columns = RequestColumns.from_requests(self._requests)
+        return self._columns
 
     @property
     def avg_latency_ms(self) -> float:
         """Mean end-to-end latency (includes queueing)."""
-        return statistics.fmean(r.latency_ms for r in self.requests)
+        c = self.columns
+        return float(np.mean(c.finish_ms - c.submit_ms))
 
     @property
     def avg_service_ms(self) -> float:
         """Mean pure service time (execution + communication only)."""
-        return statistics.fmean(r.service_ms for r in self.requests)
+        return float(np.mean(self.columns.service_ms))
 
     @property
     def p99_latency_ms(self) -> float:
         """99th-percentile end-to-end latency."""
-        lats = sorted(r.latency_ms for r in self.requests)
-        return lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+        c = self.columns
+        lats = np.sort(c.finish_ms - c.submit_ms)
+        return float(lats[min(len(lats) - 1, int(0.99 * len(lats)))])
 
     @property
     def throughput_rps(self) -> float:
         """Requests per second over the run's makespan."""
-        makespan = max(r.finish_ms for r in self.requests) - min(
-            r.submit_ms for r in self.requests)
-        return 1000.0 * len(self.requests) / max(makespan, 1e-9)
+        c = self.columns
+        makespan = float(c.finish_ms.max() - c.submit_ms.min())
+        return 1000.0 * len(c) / max(makespan, 1e-9)
 
     @property
     def steady_latency_ms(self) -> float:
         """Inverse-throughput latency (bottleneck stage in steady state)."""
         return 1000.0 / self.throughput_rps
 
+    def tail_throughput_rps(self, skip_frac: float = 0.5) -> float:
+        """Steady-state throughput: completion rate over the stream's tail,
+        after the first ``skip_frac`` of finishes.
+
+        The makespan-based :attr:`throughput_rps` includes the pipeline-fill
+        ramp, which penalizes configurations that trade fill latency for
+        steady-state rate (micro-batching fills k-deep before the first
+        finish). This is the metric the engine's overlap/micro-batch
+        comparisons are judged on. Streams too short to have a tail
+        (< 3 requests) fall back to the makespan metric."""
+        f = np.sort(self.columns.finish_ms)
+        if len(f) < 3:
+            return self.throughput_rps
+        k = min(len(f) - 2, int(len(f) * skip_frac))
+        span = float(f[-1] - f[k])
+        return 1000.0 * (len(f) - 1 - k) / max(span, 1e-9)
+
     @property
     def avg_comm_ms(self) -> float:
         """Mean per-request boundary-transfer time."""
-        return statistics.fmean(r.comm_ms for r in self.requests)
+        return float(np.mean(self.columns.comm_ms))
 
     def row(self) -> dict:
         """Flatten the report into one benchmark-table row."""
@@ -141,6 +252,7 @@ class DistributedInference:
         self.cache = ResultCache() if use_cache else None
         self.executor = executor
         self.batch = batch
+        self._engine = None
         if planner is None:
             self.planner_cfg = PlannerConfig(max_stages=num_partitions)
         elif num_partitions is not None and planner.max_stages is None:
@@ -188,6 +300,38 @@ class DistributedInference:
         self._verified = True
         return ok
 
+    def infer(self, x, signature=None):
+        """Execute one real request through the deployed partitions (the
+        executor path), serving stage outputs from the ``ResultCache`` when
+        one is attached.
+
+        Entries store the actual ``(activation, residual)`` stage outputs,
+        so a repeated input skips the executor entirely for every cached
+        stage — the fix for the seed's ``put(key, True)`` placeholder that
+        could never serve real activations. ``signature``: optional stable
+        token for the input pattern; memoizes the input digest (see
+        ``cache.digest``).
+        """
+        assert self.executor is not None, "infer() needs an executor"
+        # the digest exists only to key the cache; don't hash without one
+        sig = (digest(x, signature=signature, memo=self.cache.digest_memo)
+               if self.cache is not None else None)
+        h, res = x, None
+        for part in self.plan.partitions:
+            key = None
+            if self.cache is not None:
+                key = self.cache.key(self.plan.graph_name,
+                                     (part.lo, part.hi), sig)
+                cached = self.cache.get(key)
+                if cached is not None:
+                    h, res = cached
+                    continue
+            h, res = self.executor(part.lo, part.hi, h, res)
+            if self.cache is not None:
+                self.cache.put(key, (h, res),
+                               transfer_bytes=part.out_bytes * self.batch)
+        return h
+
     # --- elasticity (beyond-paper: the paper fixes boundaries after deploy) ---
 
     def rebalance(self, method: str = "planner") -> None:
@@ -234,19 +378,44 @@ class DistributedInference:
     def run(self, num_requests: int, name: str = "amp4ec",
             repeat_rate: float = 0.0, seed: int = 0,
             concurrency: int = 32,
-            scenario: Optional[Sequence[ScenarioEvent]] = None) -> RunReport:
-        """Process a closed-loop request stream through the partition pipeline.
+            scenario: Optional[Sequence[ScenarioEvent]] = None,
+            engine=None) -> RunReport:
+        """Process a closed-loop request stream through the partition
+        pipeline via the event engine (``core.engine``).
 
-        ``concurrency``: number of requests in flight (the paper's "batches of
-        32 inference requests"); request r is submitted when request r-W
-        finishes, so reported latency is service latency, not unbounded queue
-        wait. ``repeat_rate``: fraction of requests repeating an earlier input
-        pattern (drives the +Cache configuration, mirroring the paper's
-        identical request batches). ``scenario``: timed dynamic events (node
-        death / recovery / throttle / latency spike) applied at submit
-        boundaries; with an AdaptationController attached the closed loop
-        re-partitions in response, otherwise only dead placements are repaired
-        in place.
+        ``concurrency``: number of requests in flight (the paper's "batches
+        of 32 inference requests"); request r is submitted when request r-W
+        finishes, so reported latency is service latency, not unbounded
+        queue wait. ``repeat_rate``: fraction of requests repeating an
+        earlier input pattern (drives the +Cache configuration, mirroring
+        the paper's identical request batches). ``scenario``: timed dynamic
+        events (node death / recovery / throttle / latency spike);  with an
+        AdaptationController attached the closed loop re-partitions in
+        response, otherwise only dead placements are repaired in place.
+        ``engine``: optional ``EngineConfig``; the default reproduces the
+        seed loop's timing bit-for-bit (see :meth:`run_legacy`), while
+        ``transfer="overlap"`` / ``micro_batch=k`` enable DEFER-style
+        transfer overlap and stage-level micro-batching.
+        """
+        from repro.core.engine import PipelineEngine
+        if self._engine is None:
+            self._engine = PipelineEngine(self)
+        return self._engine.run(num_requests, name=name,
+                                repeat_rate=repeat_rate, seed=seed,
+                                concurrency=concurrency, scenario=scenario,
+                                config=engine)
+
+    def run_legacy(self, num_requests: int, name: str = "amp4ec",
+                   repeat_rate: float = 0.0, seed: int = 0,
+                   concurrency: int = 32,
+                   scenario: Optional[Sequence[ScenarioEvent]] = None
+                   ) -> RunReport:
+        """The seed's serial per-request loop, kept verbatim as the parity
+        oracle for the event engine (``tests/test_engine.py`` asserts the
+        default engine configuration reproduces these per-request latencies
+        bit-for-bit). Re-derives monitor/scheduler/cost-model state per
+        request — O(requests × stages × layers) — so use :meth:`run` for
+        anything beyond a few thousand requests.
         """
         rng = np.random.default_rng(seed)
         clock = self.cluster.clock
@@ -297,8 +466,7 @@ class DistributedInference:
                 if self.cache is not None:
                     key = self.cache.key(plan.graph_name, (part.lo, part.hi), sig)
                     if self.cache.get(key) is not None:
-                        hits += 1
-                        self.cache.credit_saved(part.out_bytes)
+                        hits += 1        # get() credits the saved bytes
                         continue  # skip compute + transfer
                 ws = self.partitioner.working_set(part, batch=self.batch)
                 rec = node.execute(self.cluster.clock, self.cluster.next_task_id(),
@@ -324,7 +492,8 @@ class DistributedInference:
                     service += tm
                     t += tm
                 if self.cache is not None:
-                    self.cache.put(key, True)
+                    self.cache.put(key, (part.lo, part.hi),
+                                   transfer_bytes=part.out_bytes * self.batch)
             reqs.append(RequestMetrics(r, submit, t, comm, hits,
                                        len(plan.partitions), service))
             finishes.append(t)
@@ -354,10 +523,16 @@ class DistributedInference:
 def run_monolithic(cluster: EdgeCluster, partitioner: ModelPartitioner,
                    num_requests: int, batch: int = 1,
                    node_id: Optional[str] = None) -> RunReport:
-    """Baseline: whole model on a single node, serial, single-threaded."""
-    d = DistributedInference(cluster, partitioner, num_partitions=1, batch=batch)
-    if node_id is not None:
-        d.placement = {0: node_id}
+    """Baseline: whole model on a single node, serial, single-threaded.
+
+    An explicit ``node_id`` routes through ``deploy_plan`` (not a placement
+    override), so the deployer's memory accounting and ``assignment()``
+    agree with where the model actually runs.
+    """
+    d = DistributedInference(cluster, partitioner, num_partitions=1,
+                             batch=batch,
+                             assignment=[node_id] if node_id is not None
+                             else None)
     rep = d.run(num_requests, name="monolithic")
     rep.scheduling_overhead_ms = 0.0  # baseline has no scheduler in the paper
     return rep

@@ -333,6 +333,12 @@ class PartitionPlanner:
         # the beam may reuse nodes, so it is only capped when configured
         default_max = self._L if mode == "beam" else n
         max_stages = min(self._L, self.cfg.max_stages or default_max)
+        if mode != "beam":
+            # clamp a configured max_stages to the LIVE node count: after a
+            # death, fewer nodes than the deploy-time stage count must yield
+            # a shallower plan, not an empty permutation search (-> None,
+            # which the controller would misread as "no capacity")
+            max_stages = min(max_stages, n)
         scale = calibration * batch / speedup
         tmats = [self._time_matrix(v, batch, scale) for v in views]
         caps = [v.capability for v in views]

@@ -162,6 +162,25 @@ class TaskScheduler:
         if self.task_counts.get(node_id, 0) > 0:
             self.task_counts[node_id] -= 1
 
+    def bulk_complete(self, node_id: str, exec_ms: float, count: int,
+                      predicted_ms: Optional[float] = None) -> None:
+        """Amortized :meth:`task_completed`: fold ``count`` completions of
+        identical duration (the engine's per-stage executions since the last
+        monitor poll) into one history/ratio entry plus a ``count``-sized
+        queue-count release. Note the history entry is *one* sample, not
+        ``count``: a node whose window mixes durations (several stages per
+        node) weights each distinct duration equally rather than
+        per-completion, which is fine for the S_P/perf-weight consumers
+        (ratios are duration-independent) but is not a per-task-identical
+        history."""
+        if count <= 0:
+            return
+        self.task_completed(node_id, exec_ms, predicted_ms=predicted_ms)
+        if count > 1 and self.task_counts.get(node_id, 0) > 0:
+            # task_completed released one queue slot; release the rest
+            self.task_counts[node_id] = max(
+                0, self.task_counts[node_id] - (count - 1))
+
     def perf_weight(self, node_id: str) -> float:
         """Multiplicative capability de-rating for the partition planner:
         the inverse of the node's average observed/predicted execution

@@ -1,0 +1,23 @@
+"""Perf-regression gate (non-tier-1): ``pytest -m perf``.
+
+Registers ``scripts/check_perf.py`` under the ``perf`` marker. The default
+suite deselects it (``addopts = "-m 'not perf'"`` in pyproject.toml) so
+tier-1 stays fast; CI or a developer runs it explicitly after touching the
+engine hot path.
+"""
+
+import importlib.util
+import pathlib
+
+import pytest
+
+_SCRIPT = pathlib.Path(__file__).resolve().parents[1] / "scripts" / "check_perf.py"
+_spec = importlib.util.spec_from_file_location("check_perf", _SCRIPT)
+check_perf = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_perf)
+
+
+@pytest.mark.perf
+def test_pipeline_perf_against_committed_baseline():
+    problems = check_perf.check()
+    assert not problems, "perf gate problems:\n  " + "\n  ".join(problems)
