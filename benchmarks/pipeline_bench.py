@@ -1,7 +1,7 @@
 """Pipeline-engine benchmark: 100k-request streams, transfer overlap,
-micro-batching, and a Table-I drift guard.
+micro-batching, open-loop traffic, and a Table-I drift guard.
 
-Three sections, written to ``BENCH_pipeline.json`` (repo root):
+Four sections, written to ``BENCH_pipeline.json`` (repo root):
 
 ``table1``
     The paper's Table-I configurations (monolithic / AMP4EC / AMP4EC+Cache
@@ -13,10 +13,17 @@ Three sections, written to ``BENCH_pipeline.json`` (repo root):
     3-node testbed with the bottleneck stage sending a boundary: the naive
     blocking-send runtime (``serial``), the seed's optimistic accounting
     (``legacy``), DEFER-style overlap, and overlap + 4-way micro-batching.
+``openloop``
+    An offered-load sweep of Poisson open-loop traffic across the
+    closed-loop capacity knee (~1.55 rps on the testbed): goodput, sojourn
+    percentiles, deadline hit rate, and peak queue depth per transfer
+    model. Shows where overlap + adaptive micro-batching sustains higher
+    goodput than the blocking-send runtime once arrivals stop backing off.
 ``scale``
     A 100k-request stream on the 50-node synthetic cluster (DP-planner
-    placement), through both the fast parity path and the heap event path
-    with overlap + 8-way micro-batching. Asserts the single-digit-second
+    placement), through the fast parity path, the heap event path with
+    overlap + 8-way micro-batching, and the same event path driven by a
+    Poisson open-loop arrival process. Asserts the single-digit-second
     wall-time budget and reports simulated-requests-per-wall-second — the
     engine's figure of merit.
 
@@ -37,6 +44,7 @@ from repro.core.cost_model import execution_ms_vec, working_set_bytes
 from repro.core.engine import EngineConfig
 from repro.core.partitioner import ModelPartitioner
 from repro.core.pipeline import DistributedInference, run_monolithic
+from repro.core.traffic import PoissonArrivals
 from repro.models.graph import mobilenetv2_graph
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_pipeline.json"
@@ -84,14 +92,20 @@ def table1_rows():
     return rows
 
 
+def fresh_testbed(g):
+    """The 3-node testbed pipeline every steady-state section benchmarks:
+    3 partitions, bottleneck stage sending a boundary."""
+    return DistributedInference(make_paper_cluster(), ModelPartitioner(g),
+                                num_partitions=3,
+                                assignment=list(BOTTLENECK_SENDS))
+
+
 def mode_rows(num_requests: int = MODE_REQUESTS):
     """Steady-state comparison of the transfer/batching policies."""
     g = mobilenetv2_graph()
 
     def fresh():
-        return DistributedInference(make_paper_cluster(), ModelPartitioner(g),
-                                    num_partitions=3,
-                                    assignment=list(BOTTLENECK_SENDS))
+        return fresh_testbed(g)
 
     configs = [
         ("serial-blocking-send", EngineConfig(transfer="serial")),
@@ -137,9 +151,61 @@ def mode_rows(num_requests: int = MODE_REQUESTS):
     return rows
 
 
+#: open-loop sweep: offered Poisson rates straddling the testbed's
+#: closed-loop capacity (~1.55 rps with the bottleneck stage sending)
+OPENLOOP_RATES = (1.2, 1.5, 1.8, 2.4)
+OPENLOOP_REQUESTS = 400
+OPENLOOP_DEADLINE_MS = 2000.0
+OPENLOOP_SEED = 11
+
+
+def openloop_rows(num_requests: int = OPENLOOP_REQUESTS):
+    """Offered-load sweep: Poisson open-loop arrivals across the capacity
+    knee, per transfer model. Bit-reproducible (seeded arrival process),
+    so every field is guarded exactly by ``scripts/check_perf.py``."""
+    g = mobilenetv2_graph()
+    configs = [
+        ("serial", EngineConfig(transfer="serial")),
+        ("overlap+amb4", EngineConfig(transfer="overlap", micro_batch=4,
+                                      fabric="shared", adaptive_batch=True)),
+    ]
+    rows = []
+    goodput = {}
+    for rate in OPENLOOP_RATES:
+        for name, cfg in configs:
+            d = fresh_testbed(g)
+            rep = d.run(num_requests, name=name, engine=cfg,
+                        arrivals=PoissonArrivals(rate_rps=rate,
+                                                 seed=OPENLOOP_SEED))
+            gp = rep.goodput_rps(OPENLOOP_DEADLINE_MS)
+            assert gp <= rep.offered_load_rps + 1e-9, \
+                "goodput exceeded offered load"
+            goodput[(name, rate)] = gp
+            rows.append(dict(
+                config=f"{name}@{rate}rps",
+                offered_rps=round(rep.offered_load_rps, 4),
+                goodput_rps=round(gp, 4),
+                deadline_hit_pct=round(
+                    100.0 * rep.deadline_hit_rate(OPENLOOP_DEADLINE_MS), 2),
+                p50_sojourn_ms=round(rep.p50_sojourn_ms, 2),
+                p99_sojourn_ms=round(rep.p99_sojourn_ms, 2),
+                peak_queue_depth=int(rep.queue_depth[1].max()),
+            ))
+    # the knee: past capacity, overlap + adaptive micro-batching sustains
+    # strictly more deadline-meeting goodput than the blocking-send runtime
+    top = OPENLOOP_RATES[-1]
+    assert goodput[("overlap+amb4", top)] > goodput[("serial", top)], \
+        "overlap+micro-batching must sustain higher goodput past the knee"
+    return rows
+
+
 #: closed-loop in-flight window for the scale section: must cover pipeline
 #: depth × micro-batch (9 stages × 8) or batches starve and bubbles form
 SCALE_CONCURRENCY = 128
+
+#: offered load of the 50-node open-loop scale row: just under the event
+#: path's steady-state completion rate (~7.6 rps), so the stream drains
+SCALE_OPENLOOP_RPS = 7.0
 
 
 def scale_rows(num_requests: int = 100_000, nodes: int = SCALE_NODES,
@@ -150,16 +216,20 @@ def scale_rows(num_requests: int = 100_000, nodes: int = SCALE_NODES,
     machines) and reports simulated-requests-per-wall-second."""
     g = mobilenetv2_graph()
     rows = []
-    for name, cfg in (
-            ("fast-path-legacy-semantics", None),
-            ("event-path-overlap+mb8", EngineConfig(transfer="overlap",
-                                                    micro_batch=8))):
+    for name, cfg, arrivals in (
+            ("fast-path-legacy-semantics", None, None),
+            ("event-path-overlap+mb8",
+             EngineConfig(transfer="overlap", micro_batch=8), None),
+            ("openloop-poisson-overlap+mb8",
+             EngineConfig(transfer="overlap", micro_batch=8),
+             PoissonArrivals(rate_rps=SCALE_OPENLOOP_RPS,
+                             seed=OPENLOOP_SEED))):
         cluster = make_synthetic_cluster(nodes, seed=7)
         d = DistributedInference(cluster, ModelPartitioner(g),
                                  method="planner")
         t0 = time.perf_counter()
         rep = d.run(num_requests, name=name, concurrency=SCALE_CONCURRENCY,
-                    engine=cfg)
+                    engine=cfg, arrivals=arrivals)
         wall_s = time.perf_counter() - t0
         if budget_s is not None and wall_s >= budget_s:
             raise RuntimeError(
@@ -190,6 +260,7 @@ def run(scale_requests: int = 100_000, write: bool = True,
     result = dict(
         table1=table1_rows(),
         modes=mode_rows(),
+        openloop=openloop_rows(),
         scale=scale_rows(scale_requests, budget_s=budget_s),
     )
     if write:

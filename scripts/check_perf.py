@@ -2,19 +2,25 @@
 """Perf-regression gate for the pipeline engine.
 
 Re-runs ``benchmarks/pipeline_bench.py`` in a reduced configuration (the
-scale section shrunk to 20k requests; the Table-I and transfer-mode
-sections are cheap and run at full size) and compares against the
+scale section shrunk to 20k requests; the Table-I, transfer-mode, and
+open-loop sections are cheap and run at full size) and compares against the
 committed ``BENCH_pipeline.json`` baseline:
 
-* **Simulated metrics** (``table1`` + ``modes`` sections, and the stage
-  count of the scale plans) must match the baseline exactly — the
+* **Simulated metrics** (``table1`` + ``modes`` + ``openloop`` sections, and
+  the stage count of the scale plans) must match the baseline exactly — the
   discrete-event simulation is bit-reproducible, so any difference is a
-  timing-model or engine drift, not noise.
+  timing-model or engine drift, not noise. A metric key present on one side
+  only is also a failure: silently added (or dropped) columns would otherwise
+  escape the gate until the next baseline refresh.
 * **Wall-clock rate** (``sim_req_per_wall_s`` of the scale section) must
-  stay above ``WALL_RATE_TOLERANCE`` × baseline — a wide band, because
+  stay at or above ``WALL_RATE_TOLERANCE`` × baseline — a wide band, because
   absolute wall time varies by machine; the gate catches order-of-magnitude
   hot-path regressions (e.g. reintroducing per-request O(layers) work),
   not scheduler jitter.
+
+The comparison itself is the pure :func:`diff_results` — unit-tested in
+``tests/test_check_perf.py`` (missing baseline, new metric keys, tolerance
+boundary) without paying for a benchmark run.
 
 Registered as the non-tier-1 ``perf`` pytest marker via
 ``tests/test_perf.py`` (the default suite deselects it; run with
@@ -37,8 +43,10 @@ BENCH_PATH = REPO / "benchmarks" / "pipeline_bench.py"
 
 #: reduced scale-section size for the gate (full bench uses 100k)
 REDUCED_SCALE_REQUESTS = 20_000
-#: current wall rate must exceed this fraction of the committed baseline
+#: current wall rate must be >= this fraction of the committed baseline
 WALL_RATE_TOLERANCE = 0.25
+#: sections whose rows are bit-reproducible and compared key-exactly
+EXACT_SECTIONS = ("table1", "modes", "openloop")
 #: scale-section fields that depend on stream length or wall clock — not
 #: compared exactly (the wall rate has its own tolerance band above)
 SCALE_VOLATILE_FIELDS = {"num_requests", "wall_s", "sim_req_per_wall_s",
@@ -53,6 +61,61 @@ def _load_bench():
     return mod
 
 
+def _diff_row(section: str, brow: dict, crow: dict,
+              volatile: frozenset, problems: List[str]) -> None:
+    cfg = brow.get("config", "?")
+    for k, v in brow.items():
+        if k in volatile:
+            continue
+        if k not in crow:
+            problems.append(f"{section}/{cfg}: metric {k} missing from "
+                            f"current run (baseline {v!r})")
+        elif crow[k] != v:
+            problems.append(f"{section}/{cfg}: {k} = {crow[k]!r}, "
+                            f"baseline {v!r} (simulated metric drifted)")
+    for k in crow:
+        if k not in brow and k not in volatile:
+            problems.append(f"{section}/{cfg}: new metric key {k} = "
+                            f"{crow[k]!r} not in baseline — refresh "
+                            f"BENCH_pipeline.json")
+
+
+def diff_results(baseline: dict, current: dict,
+                 wall_rate_tolerance: float = WALL_RATE_TOLERANCE
+                 ) -> List[str]:
+    """Diff a current benchmark result against the committed baseline;
+    returns one line per problem (empty list == clean). Pure — both inputs
+    are the ``pipeline_bench.run()`` result shape, so edge cases (new
+    keys, tolerance boundaries) are unit-testable without a bench run."""
+    problems: List[str] = []
+
+    for section in EXACT_SECTIONS + ("scale",):
+        if len(current.get(section, [])) != len(baseline.get(section, [])):
+            problems.append(
+                f"{section}: {len(current.get(section, []))} row(s), "
+                f"baseline has {len(baseline.get(section, []))} — "
+                f"configuration coverage changed")
+
+    for section in EXACT_SECTIONS:
+        for brow, crow in zip(baseline.get(section, []),
+                              current.get(section, [])):
+            _diff_row(section, brow, crow, frozenset(), problems)
+
+    volatile = frozenset(SCALE_VOLATILE_FIELDS)
+    for brow, crow in zip(baseline.get("scale", []),
+                          current.get("scale", [])):
+        cfg = brow.get("config", "?")
+        _diff_row("scale", brow, crow, volatile, problems)
+        floor = brow["sim_req_per_wall_s"] * wall_rate_tolerance
+        if crow["sim_req_per_wall_s"] < floor:
+            problems.append(
+                f"scale/{cfg}: {crow['sim_req_per_wall_s']:.0f} "
+                f"sim-req/wall-s < {floor:.0f} "
+                f"({wall_rate_tolerance:.0%} of baseline "
+                f"{brow['sim_req_per_wall_s']:.0f}) — hot-path regression")
+    return problems
+
+
 def check(baseline_path: pathlib.Path = BASELINE_PATH,
           scale_requests: int = REDUCED_SCALE_REQUESTS) -> List[str]:
     """Run the reduced benchmark and diff it against the committed
@@ -65,40 +128,7 @@ def check(baseline_path: pathlib.Path = BASELINE_PATH,
     # below, which *reports* on slow machines instead of crashing mid-bench
     current = _load_bench().run(scale_requests=scale_requests, write=False,
                                 budget_s=None)
-    problems: List[str] = []
-
-    for section in ("table1", "modes", "scale"):
-        if len(current.get(section, [])) != len(baseline[section]):
-            problems.append(
-                f"{section}: {len(current.get(section, []))} row(s), "
-                f"baseline has {len(baseline[section])} — configuration "
-                f"coverage changed")
-
-    for section in ("table1", "modes"):
-        for brow, crow in zip(baseline[section], current[section]):
-            cfg = brow.get("config", "?")
-            for k, v in brow.items():
-                if crow.get(k) != v:
-                    problems.append(
-                        f"{section}/{cfg}: {k} = {crow.get(k)!r}, "
-                        f"baseline {v!r} (simulated metric drifted)")
-
-    for brow, crow in zip(baseline["scale"], current["scale"]):
-        cfg = brow.get("config", "?")
-        for k, v in brow.items():
-            if k in SCALE_VOLATILE_FIELDS:
-                continue
-            if crow.get(k) != v:
-                problems.append(f"scale/{cfg}: {k} = {crow.get(k)!r}, "
-                                f"baseline {v!r}")
-        floor = brow["sim_req_per_wall_s"] * WALL_RATE_TOLERANCE
-        if crow["sim_req_per_wall_s"] < floor:
-            problems.append(
-                f"scale/{cfg}: {crow['sim_req_per_wall_s']:.0f} "
-                f"sim-req/wall-s < {floor:.0f} "
-                f"({WALL_RATE_TOLERANCE:.0%} of baseline "
-                f"{brow['sim_req_per_wall_s']:.0f}) — hot-path regression")
-    return problems
+    return diff_results(baseline, current)
 
 
 def main() -> int:

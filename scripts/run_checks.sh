@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Reproduce the full PR gate locally with one command:
+#
+#   1. tier-1 pytest        (the suite every PR must keep green)
+#   2. check_docs.py        (public-API docstring lint for repro.core)
+#   3. perf marker          (pytest -m perf -> scripts/check_perf.py:
+#                            reduced benchmark vs committed BENCH_pipeline.json)
+#
+# Usage:  scripts/run_checks.sh [--skip-perf]
+#   --skip-perf  run only the fast gates (tier-1 + docs); the perf gate
+#                re-runs the pipeline benchmark and takes ~1 min.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== [1/3] tier-1 test suite =="
+python -m pytest -x -q
+
+echo "== [2/3] docstring gate (scripts/check_docs.py) =="
+python scripts/check_docs.py
+
+if [[ "${1:-}" == "--skip-perf" ]]; then
+    echo "== [3/3] perf gate SKIPPED (--skip-perf) =="
+else
+    echo "== [3/3] perf gate (pytest -m perf -> scripts/check_perf.py) =="
+    python -m pytest -q -m perf
+fi
+
+echo "all gates clean"

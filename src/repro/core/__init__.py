@@ -16,14 +16,15 @@ request streams).
 """
 
 from repro.core.adaptation import (AdaptationConfig, AdaptationController,
-                                   ScenarioEvent, cpu_throttle, latency_spike,
-                                   node_death, node_recovery)
+                                   ScenarioEvent, cpu_throttle, jitter_events,
+                                   latency_spike, node_death, node_recovery)
 from repro.core.cache import ResultCache
 from repro.core.cluster import (EdgeCluster, EdgeNode, make_paper_cluster,
                                 make_synthetic_cluster)
 from repro.core.cost_model import NodeProfile, PROFILES
 from repro.core.deployer import ModelDeployer
 from repro.core.engine import EngineConfig, PipelineEngine
+from repro.core.fabric import FairShareFabric
 from repro.core.monitor import NodeStats, ResourceMonitor
 from repro.core.partitioner import ModelPartitioner, Partition, PartitionPlan
 from repro.core.pipeline import DistributedInference, RunReport, run_monolithic
@@ -31,16 +32,22 @@ from repro.core.planner import (NodeView, PartitionPlanner, PlannerConfig,
                                 PlanResult, node_views_from_cluster,
                                 node_views_from_stats)
 from repro.core.scheduler import TaskRequirements, TaskScheduler
+from repro.core.traffic import (ArrivalProcess, BurstyArrivals,
+                                DeterministicArrivals, PoissonArrivals,
+                                TraceArrivals, adaptive_k)
 
 __all__ = [
     "AdaptationConfig", "AdaptationController", "ScenarioEvent",
-    "cpu_throttle", "latency_spike", "node_death", "node_recovery",
+    "cpu_throttle", "jitter_events", "latency_spike", "node_death",
+    "node_recovery",
     "ResultCache", "EdgeCluster", "EdgeNode", "make_paper_cluster",
     "make_synthetic_cluster", "NodeProfile", "PROFILES", "ModelDeployer",
-    "EngineConfig", "PipelineEngine",
+    "EngineConfig", "PipelineEngine", "FairShareFabric",
     "NodeStats", "ResourceMonitor", "ModelPartitioner", "Partition",
     "PartitionPlan", "DistributedInference", "RunReport", "run_monolithic",
     "NodeView", "PartitionPlanner", "PlannerConfig", "PlanResult",
     "node_views_from_cluster", "node_views_from_stats",
     "TaskRequirements", "TaskScheduler",
+    "ArrivalProcess", "BurstyArrivals", "DeterministicArrivals",
+    "PoissonArrivals", "TraceArrivals", "adaptive_k",
 ]

@@ -30,9 +30,11 @@ expressed as ``ScenarioEvent``s the pipeline applies at submit boundaries.
 
 from __future__ import annotations
 
+import dataclasses
 import math
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.cluster import EdgeCluster
 from repro.core.monitor import (LATENCY_THRESHOLD_MS, NodeStats,
@@ -52,6 +54,9 @@ class AdaptationConfig:
     calibration_band: float = 0.25      # |calibration/planned - 1| beyond band
     capacity_band: float = 0.25         # live capability drift vs. plan-time
     latency_threshold_ms: float = LATENCY_THRESHOLD_MS  # latency-spike trigger
+    #: open-loop overload: arrival rate > ratio × completion rate for
+    #: ``sustained_polls`` consecutive engine polls (fed by observe_rates)
+    overload_rate_ratio: float = 1.2
     amortize_requests: int = 32         # horizon the bottleneck gain pays over
     redeploy_penalty_ms: float = 25.0   # per-moved-partition restart cost
     min_gain_ratio: float = 1.0         # gain must exceed cost * ratio
@@ -122,6 +127,30 @@ def latency_spike(at_ms: float, node_id: str,
                          dict(net_latency_ms=net_latency_ms))
 
 
+def jitter_events(events: Sequence[ScenarioEvent], rng,
+                  max_jitter_ms: float = 100.0) -> List[ScenarioEvent]:
+    """Perturb each event's firing time by a uniform ±``max_jitter_ms``
+    draw from the **caller-supplied** ``numpy.random.Generator`` — the
+    project-wide explicit-RNG contract: no stochastic component reads
+    global seed state, so a jittered scenario is exactly as reproducible
+    as its (events, generator seed) inputs.
+
+    The *original time order is preserved*: events are jittered in
+    ascending-``at_ms`` order and each result is clamped to be no earlier
+    than its predecessor (and never negative). Dependent pairs — a death
+    followed by its recovery — therefore stay a death followed by a
+    recovery; independent jitter with a re-sort would silently swap them
+    and turn a transient outage into a permanent one."""
+    out: List[ScenarioEvent] = []
+    floor = 0.0
+    for ev in sorted(events, key=lambda e: e.at_ms):
+        at = max(floor, ev.at_ms + float(rng.uniform(-max_jitter_ms,
+                                                     max_jitter_ms)))
+        out.append(dataclasses.replace(ev, at_ms=at))
+        floor = at
+    return out
+
+
 def apply_scenario_event(cluster: EdgeCluster, ev: ScenarioEvent) -> None:
     """Apply one ``ScenarioEvent`` to the cluster (offline / recover /
     profile mutation)."""
@@ -158,6 +187,28 @@ class AdaptationController:
         self._last_skipped_drifts: Optional[tuple] = None
         self._planned_calibration = self.partitioner.calibration
         self._planned_caps: Optional[Dict[str, float]] = None
+        #: (offered_rps, completed_rps) per engine poll — open-loop runs
+        #: only. Sized from sustained_polls so a slow-reacting config
+        #: (sustained_polls > 32) can still accumulate enough consecutive
+        #: windows for the arrival-overload drift to fire.
+        self._rate_obs: deque = deque(maxlen=max(32, self.cfg.sustained_polls))
+
+    def observe_rates(self, offered_rps: float,
+                      completed_rps: float) -> None:
+        """Record one poll window's arrival rate vs completion rate (the
+        open-loop engine calls this every poll tick). Sustained
+        ``offered > overload_rate_ratio × completed`` becomes the
+        ``arrival-overload`` drift — the signal a closed-loop stream can
+        never produce, because its submission backs off with the service
+        rate by construction."""
+        self._rate_obs.append((offered_rps, completed_rps))
+
+    def reset_rates(self) -> None:
+        """Drop accumulated rate observations. The engine calls this at
+        every stream start: each run is a fresh traffic experiment, and a
+        previous stream's overload window must not keep the
+        ``arrival-overload`` drift alive into the next run."""
+        self._rate_obs.clear()
 
     # --- telemetry -> drift ---------------------------------------------------
 
@@ -177,6 +228,11 @@ class AdaptationController:
                 drifts.append(f"overload:{nid}")
             if s.net_latency_ms > cfg.latency_threshold_ms:
                 drifts.append(f"latency:{nid}")
+        if len(self._rate_obs) >= cfg.sustained_polls:
+            recent = list(self._rate_obs)[-cfg.sustained_polls:]
+            if all(o > cfg.overload_rate_ratio * c and o > 0.0
+                   for o, c in recent):
+                drifts.append("arrival-overload")
         if self.partitioner.calibration_drift(
                 self._planned_calibration) > cfg.calibration_band:
             drifts.append("miscalibration")
@@ -251,13 +307,15 @@ class AdaptationController:
         if not drifts:
             self._last_skipped_drifts = None
             return None
-        # Threshold-style drifts (latency/stability/overload) re-fire with
-        # identical labels every poll once judged not actionable — silence
-        # exact repeats. Baseline-anchored drifts (capacity/miscalibration/
-        # offline/join) only re-appear when the signal moved again relative to
-        # the re-anchored baseline, so they always warrant a fresh evaluation
+        # Threshold-style drifts (latency/stability/overload, incl. the
+        # open-loop arrival-rate trigger) re-fire with identical labels every
+        # poll once judged not actionable — silence exact repeats.
+        # Baseline-anchored drifts (capacity/miscalibration/offline/join)
+        # only re-appear when the signal moved again relative to the
+        # re-anchored baseline, so they always warrant a fresh evaluation
         # even under the same label.
-        persistent = ("stability:", "overload:", "latency:")
+        persistent = ("stability:", "overload:", "latency:",
+                      "arrival-overload")
         if (tuple(drifts) == self._last_skipped_drifts
                 and all(d.startswith(persistent) for d in drifts)):
             return None

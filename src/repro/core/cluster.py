@@ -84,6 +84,15 @@ class EdgeNode:
         """Active tasks normalized by a nominal per-node concurrency of 2."""
         return min(1.0, self.active_tasks / 2.0)
 
+    @property
+    def queue_depth(self) -> int:
+        """Engine backlog on this node: queued stage items plus the
+        in-progress execution — the per-node counterpart of the
+        cluster-wide queue-depth series on ``RunReport`` (the engine's
+        adaptive micro-batch cap applies ``core.traffic.adaptive_k`` to
+        the waiting portion of this backlog)."""
+        return len(self.pending) + (1 if self.engine_busy else 0)
+
     def mem_pct(self) -> float:
         """Deployed-partition memory as a percentage of the node limit."""
         return 100.0 * self.mem_used_bytes / self.profile.mem_bytes

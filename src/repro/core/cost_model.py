@@ -87,6 +87,15 @@ def transfer_ms(num_bytes: float, profile: NodeProfile) -> float:
     return profile.net_latency_ms + num_bytes * 8.0 / (profile.net_bw_mbps * 1e3)
 
 
+def link_rate_bits_per_ms(profile: NodeProfile) -> float:
+    """Link drain rate in bits per millisecond — the denominator of
+    :func:`transfer_ms`'s bandwidth term, exposed as the capacity the
+    shared fabric (``core.fabric``) divides among concurrent flows. Using
+    the identical expression keeps the fluid model's solo-flow progress
+    consistent with the isolated per-message charge."""
+    return profile.net_bw_mbps * 1e3
+
+
 # --- cached / vectorized entry points (the engine's hot-path mirrors) --------
 
 @lru_cache(maxsize=65536)

@@ -46,6 +46,28 @@ Transfer policies (``EngineConfig.transfer``):
 into one execution, amortizing the fixed per-inference overhead
 (``cost_model.FIXED_OVERHEAD_MS``) and the per-message network latency —
 one k-sized activation message per boundary instead of k messages.
+``adaptive_batch=True`` turns the static k into a cap driven by queue depth
+(``core.traffic.adaptive_k``): short queues are served in small batches,
+standing backlog unlocks deeper amortization.
+
+Link contention (``EngineConfig.fabric``):
+
+``isolated``
+    The cost model's per-message charge: every transfer sees the whole
+    link, no matter how many are in flight (the seed's accounting).
+``shared``
+    Progress-based fair sharing (``core.fabric.FairShareFabric``):
+    concurrent transfers into one receiver split its downlink bandwidth,
+    re-divided on every flow start/finish. A run in which no two flows
+    ever overlap on a link is bit-for-bit identical to ``isolated``.
+
+Request streams are **closed-loop** by default (request r submits when
+r-W finishes — the paper's evaluation mode). Passing an
+``ArrivalProcess`` (``core.traffic``) to :meth:`PipelineEngine.run`
+switches to **open-loop** traffic: arrival times are fixed by the process
+regardless of cluster state, ``concurrency`` becomes an admission window,
+and the report gains SLO metrics (sojourn percentiles, goodput vs offered
+load, queue-depth time series).
 
 In the event-driven modes, scenario events and the adaptation controller
 act at their *simulated* times (heap events, poll ticks) rather than at
@@ -58,22 +80,32 @@ import heapq
 import itertools
 import statistics
 import weakref
+from collections import deque
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.adaptation import ScenarioEvent, apply_scenario_event
-from repro.core.cost_model import execution_ms_cached, transfer_ms_cached
+from repro.core.cost_model import (execution_ms_cached, link_rate_bits_per_ms,
+                                   transfer_ms_cached)
+from repro.core.fabric import FairShareFabric
 from repro.core.monitor import POLL_INTERVAL_MS
 from repro.core.pipeline import RequestColumns, RunReport
 from repro.core.scheduler import SCHEDULING_OVERHEAD_MS
+from repro.core.traffic import ArrivalProcess, adaptive_k
 
 #: transfer resource models, cheapest-semantics first (see module docstring)
 TRANSFER_MODES = ("legacy", "serial", "overlap")
 
-# heap-event priorities: fixed tie-break order at equal simulated time
-_P_SCENARIO, _P_POLL, _P_CDONE, _P_SDONE, _P_ARRIVE, _P_SUBMIT = range(6)
+#: link-contention models: isolated per-message charge vs fair-shared links
+FABRIC_MODES = ("isolated", "shared")
+
+# heap-event priorities: fixed tie-break order at equal simulated time.
+# _P_XFER covers both fabric bandwidth-completion and delivery events;
+# _P_ARRIVAL is an open-loop request reaching the admission queue.
+(_P_SCENARIO, _P_POLL, _P_CDONE, _P_XFER, _P_SDONE, _P_ARRIVE,
+ _P_ARRIVAL, _P_SUBMIT) = range(8)
 
 
 @dataclass(frozen=True)
@@ -82,15 +114,23 @@ class EngineConfig:
 
     ``transfer``: one of :data:`TRANSFER_MODES`. ``micro_batch``: maximum
     queued same-stage requests coalesced into one execution (1 = off).
-    The default configuration (``legacy``, 1) reproduces the seed loop's
-    per-request timing bit-for-bit.
+    ``fabric``: one of :data:`FABRIC_MODES` — isolated per-message link
+    charge vs progress-based fair sharing of each receiver's downlink.
+    ``adaptive_batch``: cap each batch at ``traffic.adaptive_k`` of the
+    node's queue depth instead of always taking ``micro_batch`` (which
+    then acts as the upper bound).
+    The default configuration (``legacy``, 1, ``isolated``) reproduces the
+    seed loop's per-request timing bit-for-bit.
     """
     transfer: str = "legacy"
     micro_batch: int = 1
+    fabric: str = "isolated"
+    adaptive_batch: bool = False
 
     def __post_init__(self):
         assert self.transfer in TRANSFER_MODES, self.transfer
         assert self.micro_batch >= 1, self.micro_batch
+        assert self.fabric in FABRIC_MODES, self.fabric
 
 
 class StageEntry:
@@ -292,24 +332,31 @@ class PipelineEngine:
     def run(self, num_requests: int, name: str = "amp4ec",
             repeat_rate: float = 0.0, seed: int = 0, concurrency: int = 32,
             scenario: Optional[Sequence[ScenarioEvent]] = None,
-            config: Optional[EngineConfig] = None) -> RunReport:
-        """Process a closed-loop request stream (the pipeline's ``run``
-        contract) under ``config``; defaults to the bit-for-bit legacy
-        timing model."""
+            config: Optional[EngineConfig] = None,
+            arrivals: Optional[ArrivalProcess] = None) -> RunReport:
+        """Process a request stream (the pipeline's ``run`` contract)
+        under ``config``; defaults to closed-loop submission and the
+        bit-for-bit legacy timing model. ``arrivals`` switches to
+        open-loop traffic through the event path (``concurrency`` becomes
+        the admission window)."""
         assert num_requests > 0, "empty request stream"
-        assert concurrency >= 1, "closed-loop window must be >= 1"
+        assert concurrency >= 1, "in-flight window must be >= 1"
         cfg = config or EngineConfig()
-        if cfg.transfer == "legacy" and cfg.micro_batch == 1:
+        if (arrivals is None and cfg.transfer == "legacy"
+                and cfg.micro_batch == 1 and cfg.fabric == "isolated"):
             return self._run_fast(num_requests, name, repeat_rate, seed,
                                   concurrency, scenario)
         return self._run_events(num_requests, name, repeat_rate, seed,
-                                concurrency, scenario, cfg)
+                                concurrency, scenario, cfg, arrivals)
 
     # --- shared epilogue ------------------------------------------------------
 
     def _report(self, name: str, cols: RequestColumns, total_net: float,
                 num_requests: int,
-                leftover_events: Sequence[ScenarioEvent]) -> RunReport:
+                leftover_events: Sequence[ScenarioEvent],
+                queue_depth: Optional[tuple] = None,
+                fabric_stats: Optional[dict] = None,
+                batch_hist: Optional[dict] = None) -> RunReport:
         """Common end-of-run bookkeeping: advance the clock to the last
         finish, apply scenario events the stream never reached, flush the
         scheduler feed, take the final forced poll, and aggregate the
@@ -340,6 +387,8 @@ class PipelineEngine:
             cache_stats=p.cache.stats() if p.cache else None,
             adaptation=(p.controller.summary()
                         if p.controller is not None else None),
+            queue_depth=queue_depth, fabric_stats=fabric_stats,
+            batch_hist=batch_hist,
         )
 
     # --- fast path: legacy transfer semantics, eager per-submit walk ----------
@@ -355,6 +404,8 @@ class PipelineEngine:
         p = self.pipe
         clock = p.cluster.clock
         monitor, scheduler, controller = p.monitor, p.scheduler, p.controller
+        if controller is not None:
+            controller.reset_rates()   # a new stream, fresh traffic state
         cache = p.cache
         rng = np.random.default_rng(seed)
         pattern_pool = [f"pattern-{i}" for i in range(8)]
@@ -362,6 +413,7 @@ class PipelineEngine:
         submit_c, finish_c = cols.submit_ms, cols.finish_ms
         comm_c, service_c = cols.comm_ms, cols.service_ms
         hits_c, stages_c = cols.cache_hits, cols.stages
+        arrival_c = cols.arrival_ms       # closed loop: arrival == submit
         total_net = 0.0
         pending_events = sorted(scenario or [], key=lambda e: e.at_ms)
 
@@ -431,6 +483,7 @@ class PipelineEngine:
                 if cache is not None:
                     cache.put(key, st.cache_value, transfer_bytes=st.out_bytes)
             submit_c[r] = submit
+            arrival_c[r] = submit
             finish_c[r] = t
             comm_c[r] = comm
             service_c[r] = service
@@ -445,19 +498,32 @@ class PipelineEngine:
     def _run_events(self, num_requests: int, name: str, repeat_rate: float,
                     seed: int, concurrency: int,
                     scenario: Optional[Sequence[ScenarioEvent]],
-                    cfg: EngineConfig) -> RunReport:
-        """Heap-driven event loop for the serial/overlap transfer models and
-        micro-batching: explicit compute / transfer events, per-node FIFO
-        work queues, and control (scenario events, monitor polls, the
-        adaptation controller) firing at simulated times rather than submit
-        boundaries."""
+                    cfg: EngineConfig,
+                    arrivals: Optional[ArrivalProcess] = None) -> RunReport:
+        """Heap-driven event loop for the serial/overlap transfer models,
+        micro-batching, shared-bandwidth links, and open-loop arrivals:
+        explicit compute / transfer events, per-node FIFO work queues, and
+        control (scenario events, monitor polls, the adaptation controller)
+        firing at simulated times rather than submit boundaries.
+
+        With ``arrivals`` set the stream is open-loop: every request's
+        arrival time is fixed by the process up front, ``concurrency``
+        becomes an admission window (at most W requests in service;
+        arrivals beyond it wait in a FIFO admission queue, visible as
+        sojourn time), and the controller is fed arrival-rate vs
+        completion-rate observations at every poll tick (the overload
+        drift trigger)."""
         p = self.pipe
         cluster = p.cluster
         clock = cluster.clock
         monitor, scheduler, controller = p.monitor, p.scheduler, p.controller
+        if controller is not None:
+            controller.reset_rates()   # a new stream, fresh traffic state
         cache = p.cache
         mode = cfg.transfer
         kmax = cfg.micro_batch
+        adaptive = cfg.adaptive_batch
+        fabric = FairShareFabric() if cfg.fabric == "shared" else None
         rng = np.random.default_rng(seed)
         pattern_pool = [f"pattern-{i}" for i in range(8)]
         cols = RequestColumns(num_requests)
@@ -467,7 +533,14 @@ class PipelineEngine:
         sigs: List[Optional[str]] = [None] * num_requests
         total_net = 0.0
         done = 0
+        arrived = 0                  # requests that entered the system
+        in_flight = 0                # open-loop: admitted, not yet finished
+        admit_q: deque = deque()
+        qd_t: List[float] = []       # queue-depth series (poll-tick samples)
+        qd_n: List[int] = []
+        bhist: Dict[int, int] = {}   # micro-batch size -> executions
         t0 = clock.now_ms
+        last_rate_t, last_arr, last_done = t0, 0, 0
         heap: list = []
         seq = itertools.count()
 
@@ -475,8 +548,23 @@ class PipelineEngine:
             heapq.heappush(heap, (max(ev.at_ms, t0), _P_SCENARIO,
                                   next(seq), ev))
         heapq.heappush(heap, (t0, _P_POLL, next(seq), None))
-        for r in range(min(concurrency, num_requests)):
-            heapq.heappush(heap, (t0, _P_SUBMIT, next(seq), r))
+        if arrivals is None:
+            for r in range(min(concurrency, num_requests)):
+                heapq.heappush(heap, (t0, _P_SUBMIT, next(seq), r))
+        else:
+            offs = np.asarray(arrivals.offsets(num_requests),
+                              dtype=np.float64)
+            assert len(offs) == num_requests, (
+                f"arrival process produced {len(offs)} offsets for "
+                f"{num_requests} requests")
+            assert bool(np.all(np.diff(offs) >= 0)), \
+                "arrival offsets must be non-decreasing"
+            cols.arrival_ms[:] = t0 + offs
+            at_arr = cols.arrival_ms.tolist()    # python floats for the heap
+            # arrivals are chained (each event pushes its successor), so the
+            # heap holds one pending arrival instead of all num_requests —
+            # the event count is unchanged but the heap stays depth-O(W)
+            heapq.heappush(heap, (at_arr[0], _P_ARRIVAL, next(seq), 0))
 
         # ensure engine queue/busy state is clean for the placement nodes
         for node in cluster.nodes.values():
@@ -494,11 +582,13 @@ class PipelineEngine:
             if node.engine_busy or not node.pending:
                 return
             q = node.pending
+            kcap = adaptive_k(len(q), kmax) if adaptive else kmax
             st, first = q.popleft()
             batch = [first]
-            while len(batch) < kmax and q and q[0][0] is st:
+            while len(batch) < kcap and q and q[0][0] is st:
                 batch.append(q.popleft()[1])
             k = len(batch)
+            bhist[k] = bhist.get(k, 0) + 1
             start = node.busy_until_ms
             if now > start:
                 start = now
@@ -519,12 +609,19 @@ class PipelineEngine:
                                   (node, st, batch, dur)))
 
         def finish_request(r: int, t: float) -> None:
-            nonlocal done
+            nonlocal done, in_flight
             cols.finish_ms[r] = t
             done += 1
-            nxt = r + concurrency
-            if nxt < num_requests:
-                heapq.heappush(heap, (t, _P_SUBMIT, next(seq), nxt))
+            if arrivals is None:       # closed loop: r's finish submits r+W
+                nxt = r + concurrency
+                if nxt < num_requests:
+                    heapq.heappush(heap, (t, _P_SUBMIT, next(seq), nxt))
+            else:                      # open loop: a slot frees; admit FIFO
+                in_flight -= 1
+                if admit_q:
+                    in_flight += 1
+                    heapq.heappush(heap, (t, _P_SUBMIT, next(seq),
+                                          admit_q.popleft()))
 
         def route(table: StageTable, idx: int, rs: List[int],
                   t: float) -> None:
@@ -569,6 +666,9 @@ class PipelineEngine:
             if prio == _P_SUBMIT:
                 r = payload
                 cols.submit_ms[r] = t
+                if arrivals is None:
+                    arrived += 1
+                    cols.arrival_ms[r] = t   # closed loop: arrival == submit
                 if repeat_rate > 0 and rng.random() < repeat_rate:
                     sigs[r] = rng.choice(pattern_pool)
                 else:
@@ -579,6 +679,17 @@ class PipelineEngine:
                 cols.stages[r] = len(table.stages)
                 heapq.heappush(heap, (t + SCHEDULING_OVERHEAD_MS, _P_ARRIVE,
                                       next(seq), (table, 0, [r])))
+
+            elif prio == _P_ARRIVAL:   # open loop: request enters the system
+                arrived += 1
+                if arrived < num_requests:   # chain the next arrival
+                    heapq.heappush(heap, (at_arr[arrived], _P_ARRIVAL,
+                                          next(seq), arrived))
+                if in_flight < concurrency:
+                    in_flight += 1
+                    heapq.heappush(heap, (t, _P_SUBMIT, next(seq), payload))
+                else:
+                    admit_q.append(payload)
 
             elif prio == _P_ARRIVE:
                 table, idx, rs = payload
@@ -605,10 +716,47 @@ class PipelineEngine:
                     node.net_tx_bytes += ob
                     recv.net_rx_bytes += ob
                     total_net += ob
+                    tbl = st._table
+                    if fabric is not None:
+                        # shared fabric: the message becomes a flow on the
+                        # receiver's downlink; wire time (and the sender's
+                        # unblocking, in serial mode) resolves at delivery —
+                        # comm/service are charged then, with the actual
+                        # (possibly shared-bandwidth-stretched) elapsed time
+                        fpay = (tbl, st.next_index, batch,
+                                node if mode == "serial" else None)
+                        if mode == "overlap":
+                            # the sender's tx FIFO still gates when a flow
+                            # *starts* (solo duration as the occupancy
+                            # estimate) — dropping it would let one node
+                            # transmit several flows at full rate in
+                            # parallel, making "shared" MORE optimistic
+                            # than the isolated charge it tightens
+                            node.engine_busy = False
+                            sx = node.tx_free_ms
+                            if t > sx:
+                                sx = t
+                            node.tx_free_ms = sx + tm
+                            if sx > t:   # deferred flow start at tx-free
+                                heapq.heappush(
+                                    heap, (sx, _P_XFER, next(seq),
+                                           ("fs", recv, ob, tm, fpay)))
+                                try_start(node, t)
+                                continue
+                        elif mode != "serial":   # legacy: no sender resource
+                            node.engine_busy = False
+                        ver, nxt = fabric.start(
+                            recv.node_id, link_rate_bits_per_ms(recv.profile),
+                            ob * 8.0, tm, recv.profile.net_latency_ms,
+                            fpay, t)
+                        heapq.heappush(heap, (nxt, _P_XFER, next(seq),
+                                              ("bw", recv.node_id, ver)))
+                        if mode != "serial":
+                            try_start(node, t)
+                        continue
                     for r in batch:
                         comm[r] += tm
                         service[r] += tm
-                    tbl = st._table
                     if mode == "overlap":
                         # async tx link: node frees now, sends FIFO-queue
                         node.engine_busy = False
@@ -633,6 +781,36 @@ class PipelineEngine:
                                               (tbl, st.next_index, batch)))
                         try_start(node, t)
 
+            elif prio == _P_XFER:        # shared-fabric link events
+                if payload[0] == "bw":   # a link's bandwidth completion
+                    _, link_id, ver = payload
+                    res = fabric.on_event(link_id, ver, t)
+                    if res is not None:  # None: membership changed since
+                        delivered, nxt = res
+                        for fpayload, at, elapsed in delivered:
+                            heapq.heappush(heap, (at, _P_XFER, next(seq),
+                                                  ("dl", fpayload, elapsed)))
+                        if nxt is not None:
+                            heapq.heappush(heap, (nxt[1], _P_XFER, next(seq),
+                                                  ("bw", link_id, nxt[0])))
+                elif payload[0] == "fs":  # deferred flow start (tx freed)
+                    _, recv, ob, tm, fpay = payload
+                    ver, nxt = fabric.start(
+                        recv.node_id, link_rate_bits_per_ms(recv.profile),
+                        ob * 8.0, tm, recv.profile.net_latency_ms, fpay, t)
+                    heapq.heappush(heap, (nxt, _P_XFER, next(seq),
+                                          ("bw", recv.node_id, ver)))
+                else:                    # "dl": activation delivery
+                    _, (tbl, idx, batch, blocked), elapsed = payload
+                    for r in batch:
+                        comm[r] += elapsed
+                        service[r] += elapsed
+                    if blocked is not None:   # serial: unblock the sender
+                        blocked.busy_until_ms = t
+                        blocked.engine_busy = False
+                        try_start(blocked, t)
+                    route(tbl, idx, batch, t)
+
             elif prio == _P_SDONE:
                 node = payload
                 node.engine_busy = False
@@ -643,10 +821,30 @@ class PipelineEngine:
                     stats = monitor.online_stats()
                     scheduler.select_node(stats)
                     self._flush_sched()
+                qd_t.append(t)
+                qd_n.append(arrived - done)   # in system, admission q incl.
+                if arrivals is not None and controller is not None:
+                    # arrival-rate vs completion-rate over the poll window:
+                    # the open-loop overload signal (closed-loop streams
+                    # can't overload — submission backs off by construction)
+                    window = t - last_rate_t
+                    if window > 0:
+                        controller.observe_rates(
+                            1000.0 * (arrived - last_arr) / window,
+                            1000.0 * (done - last_done) / window)
+                        last_rate_t, last_arr, last_done = t, arrived, done
                 if controller is not None:
                     controller.on_engine_event("poll")
-                heapq.heappush(heap, (t + POLL_INTERVAL_MS, _P_POLL,
-                                      next(seq), None))
+                # re-chain the poll only while some progress-capable event
+                # remains (the heap is O(window)-small, so the scan is
+                # cheap). Without this check the self-rechaining poll keeps
+                # the heap non-empty forever and a stranded request would
+                # spin the loop instead of reaching the conservation error
+                # below.
+                if any(pr not in (_P_POLL, _P_SCENARIO)
+                       for _, pr, _, _ in heap):
+                    heapq.heappush(heap, (t + POLL_INTERVAL_MS, _P_POLL,
+                                          next(seq), None))
 
             else:                          # _P_SCENARIO
                 apply_scenario_event(cluster, payload)
@@ -660,10 +858,22 @@ class PipelineEngine:
                     # later submit (or recovery event) retries via
                     # _ensure_placement_alive before routing new requests
 
+        # conservation: every request that arrived must have completed (the
+        # engine drains in-flight and admission-queued work before exiting)
+        if done < num_requests:
+            raise RuntimeError(
+                f"engine drained its event heap with {done}/{num_requests} "
+                f"completions — {arrived - done} request(s) lost in flight")
+
         # scenario events past the stream's end still take effect
         leftover = sorted((pl for _, pr, _, pl in heap if pr == _P_SCENARIO),
                           key=lambda e: e.at_ms)
         cols.comm_ms[:] = comm
         cols.service_ms[:] = service
         cols.cache_hits[:] = hits
-        return self._report(name, cols, total_net, num_requests, leftover)
+        return self._report(
+            name, cols, total_net, num_requests, leftover,
+            queue_depth=(np.asarray(qd_t, dtype=np.float64),
+                         np.asarray(qd_n, dtype=np.int64)),
+            fabric_stats=fabric.stats() if fabric is not None else None,
+            batch_hist=dict(sorted(bhist.items())))

@@ -1,0 +1,206 @@
+"""Shared-bandwidth fabric: progress-based fair sharing of boundary links.
+
+The cost model's ``transfer_ms`` charges every boundary activation the full
+link bandwidth in isolation — two transfers landing on the same receiver at
+the same simulated time each "see" the whole pipe. That optimism is exactly
+what DEFER's streaming evaluation shows breaking down on dense clusters,
+where the wire (not compute) becomes the bottleneck. This module replaces
+the isolated per-message charge with a fluid-flow model of each receiver's
+downlink: the ``n`` transfers concurrently in flight on a link each progress
+at ``bandwidth / n``, re-divided whenever a flow starts or finishes
+(processor-sharing, the standard fluid approximation of per-packet fair
+queueing).
+
+Mechanics (driven by ``core.engine``'s heap — the fabric never owns time):
+
+* Each flow carries its remaining payload bits and joins the link of the
+  *receiving* node (key = node id): concurrent senders into one receiver
+  split that receiver's downlink.
+* On every membership change the link advances all active flows by the
+  elapsed time at the old fair share, then recomputes each flow's
+  bandwidth-completion estimate at the new share. The engine schedules one
+  heap event per link at the earliest estimate; a per-link ``version``
+  stamp invalidates events scheduled before the latest membership change.
+* Delivery happens one propagation latency after bandwidth completion.
+  A flow that was **never disturbed** (alone on its link from start to
+  bandwidth completion) is delivered at ``start + transfer_ms(bytes)``
+  computed by the *same* cached cost-model call the isolated accounting
+  uses — so a shared-fabric run in which no two flows ever overlap is
+  **bit-for-bit identical** to the isolated accounting
+  (``tests/test_traffic.py`` pins this degenerate parity).
+
+The latency tail is propagation, not occupancy: a flow stops consuming
+bandwidth at its bandwidth-completion event, so flows starting during
+another flow's latency tail do not share with it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+#: slack (ms) under which a flow's completion estimate counts as reached at
+#: an event timestamp — absorbs the float non-associativity of advancing
+#: progress in increments vs. the one-shot estimate.
+_COMPLETION_SLACK_MS = 1e-9
+
+
+class Flow:
+    """One boundary transfer in flight on a shared link: remaining payload
+    bits, the engine payload to deliver, and the bookkeeping that decides
+    whether the flow kept the isolated-accounting fast path (undisturbed)
+    or fell to fluid fair-share accounting."""
+
+    __slots__ = ("bits_left", "payload", "start_ms", "solo_ms", "latency_ms",
+                 "disturbed", "bw_done_est")
+
+    def __init__(self, bits: float, payload, start_ms: float, solo_ms: float,
+                 latency_ms: float):
+        self.bits_left = bits
+        self.payload = payload
+        self.start_ms = start_ms
+        self.solo_ms = solo_ms          # isolated-accounting transfer_ms
+        self.latency_ms = latency_ms
+        self.disturbed = False          # ever shared its link?
+        self.bw_done_est = 0.0          # bandwidth-completion estimate
+
+    def deliver_at(self, bw_done: float) -> float:
+        """Delivery timestamp for a flow whose bandwidth phase completed at
+        ``bw_done``: the isolated-accounting time for undisturbed flows
+        (bit-for-bit parity), bandwidth completion plus propagation latency
+        otherwise."""
+        if not self.disturbed:
+            return self.start_ms + self.solo_ms
+        return bw_done + self.latency_ms
+
+    def elapsed_ms(self, deliver_ms: float) -> float:
+        """Wire time this flow is charged in request metrics: the exact
+        ``transfer_ms`` value when undisturbed (so per-request ``comm_ms``
+        matches isolated accounting bitwise), observed start-to-delivery
+        otherwise."""
+        if not self.disturbed:
+            return self.solo_ms
+        return deliver_ms - self.start_ms
+
+
+class _Link:
+    """Fluid state of one shared link: active flows, the last time progress
+    was advanced, and the version stamp that invalidates stale heap events."""
+
+    __slots__ = ("rate", "flows", "last_ms", "version", "peak")
+
+    def __init__(self, rate_bits_per_ms: float):
+        self.rate = rate_bits_per_ms
+        self.flows: List[Flow] = []
+        self.last_ms = 0.0
+        self.version = 0
+        self.peak = 0                   # max concurrent flows ever observed
+
+    def advance(self, now: float) -> None:
+        """Serve ``now - last_ms`` of progress to every active flow at the
+        current fair share (``rate / n``)."""
+        n = len(self.flows)
+        dt = now - self.last_ms
+        if n and dt > 0:
+            served = dt * (self.rate / n)
+            for f in self.flows:
+                f.bits_left -= served
+        self.last_ms = now
+
+    def reestimate(self) -> Optional[float]:
+        """Recompute every flow's bandwidth-completion estimate at the
+        current share; returns the earliest (the link's next heap event),
+        or None when idle."""
+        n = len(self.flows)
+        if not n:
+            return None
+        share = self.rate / n
+        nxt = None
+        for f in self.flows:
+            f.bw_done_est = self.last_ms + max(f.bits_left, 0.0) / share
+            if nxt is None or f.bw_done_est < nxt:
+                nxt = f.bw_done_est
+        return nxt
+
+
+class FairShareFabric:
+    """Progress-based fair sharing of boundary-transfer links.
+
+    One instance per engine run. The engine calls :meth:`start` when a
+    transfer begins and :meth:`on_event` when a link's scheduled
+    bandwidth-completion event fires; both return ``(version, next_ms)``
+    describing the link's next event so the engine can keep exactly one
+    live heap entry per link.
+    """
+
+    def __init__(self):
+        self._links: Dict[str, _Link] = {}
+        self.flows_started = 0
+        self.flows_shared = 0           # flows that ever split their link
+
+    def start(self, link_id: str, rate_bits_per_ms: float, bits: float,
+              solo_ms: float, latency_ms: float, payload,
+              now: float) -> Tuple[int, float]:
+        """Begin a transfer of ``bits`` on ``link_id`` at ``now``; returns
+        the link's bumped version and its next bandwidth-completion time.
+        ``solo_ms`` is the isolated-accounting ``transfer_ms`` for this
+        payload (the undisturbed delivery time); ``payload`` is returned
+        verbatim at delivery."""
+        link = self._links.get(link_id)
+        if link is None:
+            link = self._links[link_id] = _Link(rate_bits_per_ms)
+            link.last_ms = now
+        link.advance(now)
+        # profile changes (a ScenarioEvent throttling net_bw_mbps) reach the
+        # link here: the elapsed interval was just served at the old rate,
+        # the new rate applies from this membership change on — the fluid
+        # model's natural granularity for rate updates
+        link.rate = rate_bits_per_ms
+        flow = Flow(bits, payload, now, solo_ms, latency_ms)
+        if link.flows:                  # joining a busy link disturbs everyone
+            flow.disturbed = True
+            for f in link.flows:
+                if not f.disturbed:
+                    f.disturbed = True
+                    self.flows_shared += 1
+            self.flows_shared += 1
+        link.flows.append(flow)
+        link.peak = max(link.peak, len(link.flows))
+        self.flows_started += 1
+        link.version += 1
+        return link.version, link.reestimate()
+
+    def on_event(self, link_id: str, version: int, now: float):
+        """Handle a link's scheduled bandwidth-completion event.
+
+        Returns None for a stale event (the link's membership changed after
+        it was scheduled), else ``(delivered, nxt)`` where ``delivered`` is
+        a list of ``(payload, deliver_at_ms, elapsed_ms)`` for every flow
+        whose bandwidth phase is done, and ``nxt`` is ``(version, t)`` for
+        the link's next event or None when it went idle."""
+        link = self._links[link_id]
+        if version != link.version:
+            return None
+        link.advance(now)
+        done = [f for f in link.flows
+                if f.bw_done_est <= now + _COMPLETION_SLACK_MS]
+        link.flows = [f for f in link.flows
+                      if f.bw_done_est > now + _COMPLETION_SLACK_MS]
+        delivered = []
+        for f in done:
+            at = f.deliver_at(now)
+            delivered.append((f.payload, at, f.elapsed_ms(at)))
+        link.version += 1
+        nxt_t = link.reestimate()
+        return delivered, ((link.version, nxt_t) if nxt_t is not None else None)
+
+    def stats(self) -> dict:
+        """Run-level fabric telemetry: link count, flow counts, and the
+        peak concurrency observed per link (the contention the isolated
+        accounting ignores) — surfaced as ``RunReport.fabric_stats``."""
+        return dict(
+            links=len(self._links),
+            flows=self.flows_started,
+            shared_flows=self.flows_shared,
+            peak_concurrent=(max((l.peak for l in self._links.values()),
+                                 default=0)),
+        )

@@ -46,7 +46,8 @@ from repro.core.scheduler import SCHEDULING_OVERHEAD_MS, TaskScheduler
 @dataclass
 class RequestMetrics:
     """Per-request timing: submit/finish, communication, cache hits, and
-    pure service time."""
+    pure service time. ``arrival_ms`` (open-loop runs) is when the request
+    entered the system; None means closed-loop, where arrival == submit."""
     request_id: int
     submit_ms: float
     finish_ms: float
@@ -54,11 +55,20 @@ class RequestMetrics:
     cache_hits: int
     stages: int
     service_ms: float = 0.0     # pure execution + comm time, no queueing
+    arrival_ms: Optional[float] = None   # open-loop arrival (None: = submit)
 
     @property
     def latency_ms(self) -> float:
         """End-to-end latency including queueing (finish - submit)."""
         return self.finish_ms - self.submit_ms
+
+    @property
+    def sojourn_ms(self) -> float:
+        """Time in system (finish - arrival): the open-loop SLO metric,
+        including admission-queue wait. Equals :attr:`latency_ms` for
+        closed-loop requests."""
+        arrival = self.arrival_ms if self.arrival_ms is not None else self.submit_ms
+        return self.finish_ms - arrival
 
 
 class RequestColumns:
@@ -72,7 +82,7 @@ class RequestColumns:
     """
 
     __slots__ = ("submit_ms", "finish_ms", "comm_ms", "service_ms",
-                 "cache_hits", "stages")
+                 "cache_hits", "stages", "arrival_ms")
 
     def __init__(self, n: int):
         self.submit_ms = np.zeros(n, dtype=np.float64)
@@ -81,9 +91,21 @@ class RequestColumns:
         self.service_ms = np.zeros(n, dtype=np.float64)
         self.cache_hits = np.zeros(n, dtype=np.int64)
         self.stages = np.zeros(n, dtype=np.int64)
+        self.arrival_ms = np.zeros(n, dtype=np.float64)
 
     def __len__(self) -> int:
         return len(self.submit_ms)
+
+    @property
+    def sojourn_ms(self) -> np.ndarray:
+        """Per-request time in system (finish - arrival), admission-queue
+        wait included — the open-loop SLO column. For closed-loop runs
+        arrival == submit, so this equals queueing latency."""
+        return self.finish_ms - self.arrival_ms
+
+    def deadline_met(self, deadline_ms: float) -> np.ndarray:
+        """Per-request SLO flag: sojourn within ``deadline_ms``."""
+        return self.sojourn_ms <= deadline_ms
 
     @classmethod
     def from_requests(cls, requests: Sequence[RequestMetrics]
@@ -99,6 +121,8 @@ class RequestColumns:
             cols.service_ms[i] = r.service_ms
             cols.cache_hits[i] = r.cache_hits
             cols.stages[i] = r.stages
+            cols.arrival_ms[i] = (r.arrival_ms if r.arrival_ms is not None
+                                  else r.submit_ms)
         return cols
 
     def materialize(self) -> List[RequestMetrics]:
@@ -108,7 +132,8 @@ class RequestColumns:
                                float(self.finish_ms[i]),
                                float(self.comm_ms[i]),
                                int(self.cache_hits[i]), int(self.stages[i]),
-                               float(self.service_ms[i]))
+                               float(self.service_ms[i]),
+                               float(self.arrival_ms[i]))
                 for i in range(len(self.submit_ms))]
 
 
@@ -130,7 +155,10 @@ class RunReport:
                  monitor_overhead_pct: float = 0.0,
                  stability: float = 0.0, mem_used_mb: float = 0.0,
                  cpu_pct: float = 0.0, cache_stats: Optional[dict] = None,
-                 adaptation: Optional[dict] = None):
+                 adaptation: Optional[dict] = None,
+                 queue_depth: Optional[tuple] = None,
+                 fabric_stats: Optional[dict] = None,
+                 batch_hist: Optional[dict] = None):
         assert requests is not None or columns is not None
         self.name = name
         self._requests = requests
@@ -143,6 +171,11 @@ class RunReport:
         self.cpu_pct = cpu_pct
         self.cache_stats = cache_stats
         self.adaptation = adaptation   # AdaptationController.summary()
+        #: (times_ms, in_system) arrays sampled at engine poll ticks —
+        #: requests arrived-but-unfinished, admission queue included
+        self.queue_depth = queue_depth
+        self.fabric_stats = fabric_stats   # FairShareFabric.stats()
+        self.batch_hist = batch_hist       # micro-batch size -> count
 
     @property
     def requests(self) -> List[RequestMetrics]:
@@ -211,6 +244,55 @@ class RunReport:
     def avg_comm_ms(self) -> float:
         """Mean per-request boundary-transfer time."""
         return float(np.mean(self.columns.comm_ms))
+
+    # --- open-loop / SLO metrics ---------------------------------------------
+
+    @property
+    def offered_load_rps(self) -> float:
+        """Arrival rate actually offered to the system: requests per second
+        over the arrival span. Independent of what the cluster served —
+        compare against :meth:`goodput_rps` to see the overload gap."""
+        a = self.columns.arrival_ms
+        span = float(a.max() - a.min())
+        return 1000.0 * len(a) / max(span, 1e-9)
+
+    def sojourn_percentile_ms(self, q: float) -> float:
+        """``q``-th percentile (0-100) of per-request sojourn time
+        (finish - arrival, admission wait included) via the same
+        sorted-index convention as :attr:`p99_latency_ms`."""
+        s = np.sort(self.columns.sojourn_ms)
+        return float(s[min(len(s) - 1, int(q / 100.0 * len(s)))])
+
+    @property
+    def p50_sojourn_ms(self) -> float:
+        """Median sojourn time."""
+        return self.sojourn_percentile_ms(50.0)
+
+    @property
+    def p99_sojourn_ms(self) -> float:
+        """99th-percentile sojourn time."""
+        return self.sojourn_percentile_ms(99.0)
+
+    @property
+    def p999_sojourn_ms(self) -> float:
+        """99.9th-percentile sojourn time (the SLO tail the paper's
+        closed-loop averages cannot see)."""
+        return self.sojourn_percentile_ms(99.9)
+
+    def deadline_hit_rate(self, deadline_ms: float) -> float:
+        """Fraction of requests whose sojourn met ``deadline_ms``."""
+        return float(np.mean(self.columns.deadline_met(deadline_ms)))
+
+    def goodput_rps(self, deadline_ms: float) -> float:
+        """Deadline-meeting completions per second over the whole run
+        (first arrival to last finish). Under overload this saturates —
+        and then *falls* as queueing pushes sojourns past the deadline —
+        while :attr:`offered_load_rps` keeps climbing; the gap between the
+        two curves is the open-loop knee the benchmark sweeps."""
+        c = self.columns
+        span = float(c.finish_ms.max() - c.arrival_ms.min())
+        hits = int(c.deadline_met(deadline_ms).sum())
+        return 1000.0 * hits / max(span, 1e-9)
 
     def row(self) -> dict:
         """Flatten the report into one benchmark-table row."""
@@ -379,23 +461,32 @@ class DistributedInference:
             repeat_rate: float = 0.0, seed: int = 0,
             concurrency: int = 32,
             scenario: Optional[Sequence[ScenarioEvent]] = None,
-            engine=None) -> RunReport:
-        """Process a closed-loop request stream through the partition
-        pipeline via the event engine (``core.engine``).
+            engine=None, arrivals=None) -> RunReport:
+        """Process a request stream through the partition pipeline via the
+        event engine (``core.engine``).
 
-        ``concurrency``: number of requests in flight (the paper's "batches
-        of 32 inference requests"); request r is submitted when request r-W
+        The default stream is **closed-loop** (the paper's evaluation
+        mode): ``concurrency`` requests in flight (the paper's "batches of
+        32 inference requests"); request r is submitted when request r-W
         finishes, so reported latency is service latency, not unbounded
-        queue wait. ``repeat_rate``: fraction of requests repeating an
-        earlier input pattern (drives the +Cache configuration, mirroring
-        the paper's identical request batches). ``scenario``: timed dynamic
-        events (node death / recovery / throttle / latency spike);  with an
-        AdaptationController attached the closed loop re-partitions in
-        response, otherwise only dead placements are repaired in place.
-        ``engine``: optional ``EngineConfig``; the default reproduces the
-        seed loop's timing bit-for-bit (see :meth:`run_legacy`), while
-        ``transfer="overlap"`` / ``micro_batch=k`` enable DEFER-style
-        transfer overlap and stage-level micro-batching.
+        queue wait. Passing ``arrivals`` (a ``core.traffic.ArrivalProcess``
+        — deterministic-rate, Poisson, bursty on/off, or trace replay)
+        switches to **open-loop** traffic: the process fixes every
+        request's arrival time regardless of cluster state, and
+        ``concurrency`` becomes the admission window metering arrivals
+        into service (queueing beyond it shows up in sojourn time, not in
+        a slower arrival clock). ``repeat_rate``: fraction of requests
+        repeating an earlier input pattern (drives the +Cache
+        configuration, mirroring the paper's identical request batches).
+        ``scenario``: timed dynamic events (node death / recovery /
+        throttle / latency spike); with an AdaptationController attached
+        the closed loop re-partitions in response, otherwise only dead
+        placements are repaired in place. ``engine``: optional
+        ``EngineConfig``; the default reproduces the seed loop's timing
+        bit-for-bit (see :meth:`run_legacy`), while ``transfer="overlap"``
+        / ``micro_batch=k`` / ``fabric="shared"`` / ``adaptive_batch=True``
+        enable DEFER-style transfer overlap, stage-level micro-batching,
+        fair-shared link bandwidth, and queue-depth-driven batch sizing.
         """
         from repro.core.engine import PipelineEngine
         if self._engine is None:
@@ -403,7 +494,7 @@ class DistributedInference:
         return self._engine.run(num_requests, name=name,
                                 repeat_rate=repeat_rate, seed=seed,
                                 concurrency=concurrency, scenario=scenario,
-                                config=engine)
+                                config=engine, arrivals=arrivals)
 
     def run_legacy(self, num_requests: int, name: str = "amp4ec",
                    repeat_rate: float = 0.0, seed: int = 0,
@@ -417,6 +508,8 @@ class DistributedInference:
         request — O(requests × stages × layers) — so use :meth:`run` for
         anything beyond a few thousand requests.
         """
+        if self.controller is not None:
+            self.controller.reset_rates()   # same contract as the engine
         rng = np.random.default_rng(seed)
         clock = self.cluster.clock
         pattern_pool = [f"pattern-{i}" for i in range(8)]

@@ -1,0 +1,79 @@
+"""Unit tests for the perf gate's comparison logic (`scripts/check_perf.py`):
+missing baseline file, newly added metric keys, and tolerance-boundary
+behavior — previously these paths only ever executed inside the full
+``pytest -m perf`` benchmark run."""
+
+import importlib.util
+import pathlib
+
+_SCRIPT = pathlib.Path(__file__).resolve().parents[1] / "scripts" / "check_perf.py"
+_spec = importlib.util.spec_from_file_location("check_perf_unit", _SCRIPT)
+check_perf = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_perf)
+
+
+def _result(wall_rate=20000.0, latency=443.93, extra_mode_key=None,
+            goodput=1.5):
+    """A minimal pipeline_bench.run()-shaped result dict."""
+    mode_row = dict(config="overlap", steady_state_ms=latency)
+    if extra_mode_key is not None:
+        mode_row[extra_mode_key] = 1.23
+    return dict(
+        table1=[dict(config="amp4ec", latency_ms=latency)],
+        modes=[mode_row],
+        openloop=[dict(config="poisson@2rps", goodput_rps=goodput)],
+        scale=[dict(config="fast", stages=9, num_requests=100_000,
+                    wall_s=5.0, sim_req_per_wall_s=wall_rate,
+                    tail_throughput_rps=7.5, sim_makespan_s=13337.6)],
+    )
+
+
+def test_clean_diff_is_empty():
+    assert check_perf.diff_results(_result(), _result()) == []
+
+
+def test_missing_baseline_file(tmp_path):
+    problems = check_perf.check(baseline_path=tmp_path / "nope.json")
+    assert len(problems) == 1
+    assert "missing baseline" in problems[0]
+    assert "nope.json" in problems[0]
+
+
+def test_simulated_metric_drift_detected():
+    problems = check_perf.diff_results(_result(latency=443.93),
+                                       _result(latency=444.0))
+    assert any("latency_ms" in p and "drifted" in p for p in problems)
+    # the open-loop section is compared exactly too
+    problems = check_perf.diff_results(_result(goodput=1.5),
+                                       _result(goodput=1.4))
+    assert any("openloop" in p and "goodput_rps" in p for p in problems)
+
+
+def test_new_metric_key_flagged():
+    """A key the current run emits but the baseline lacks must fail the
+    gate (it would otherwise silently escape until a baseline refresh)."""
+    problems = check_perf.diff_results(_result(),
+                                       _result(extra_mode_key="p99_ms"))
+    assert any("new metric key p99_ms" in p for p in problems)
+    # and symmetrically: a baseline key the current run dropped
+    problems = check_perf.diff_results(_result(extra_mode_key="p99_ms"),
+                                       _result())
+    assert any("missing from current run" in p for p in problems)
+
+
+def test_wall_rate_tolerance_boundary():
+    """Exactly at the floor passes (the band is >=); one unit below fails;
+    volatile wall fields never produce exact-match problems."""
+    base = _result(wall_rate=20000.0)
+    at_floor = _result(wall_rate=20000.0 * check_perf.WALL_RATE_TOLERANCE)
+    assert check_perf.diff_results(base, at_floor) == []
+    below = _result(wall_rate=20000.0 * check_perf.WALL_RATE_TOLERANCE - 1.0)
+    problems = check_perf.diff_results(base, below)
+    assert len(problems) == 1 and "hot-path regression" in problems[0]
+
+
+def test_row_count_change_detected():
+    cur = _result()
+    cur["openloop"].append(dict(config="extra", goodput_rps=1.0))
+    problems = check_perf.diff_results(_result(), cur)
+    assert any("configuration coverage changed" in p for p in problems)
