@@ -6,12 +6,14 @@ scale section shrunk to 20k requests; the Table-I, transfer-mode, and
 open-loop sections are cheap and run at full size) and compares against the
 committed ``BENCH_pipeline.json`` baseline:
 
-* **Simulated metrics** (``table1`` + ``modes`` + ``openloop`` sections, and
-  the stage count of the scale plans) must match the baseline exactly — the
-  discrete-event simulation is bit-reproducible, so any difference is a
-  timing-model or engine drift, not noise. A metric key present on one side
-  only is also a failure: silently added (or dropped) columns would otherwise
-  escape the gate until the next baseline refresh.
+* **Simulated metrics** (``table1`` + ``modes`` + ``openloop`` sections, the
+  stage count of the scale plans, and the full ``multitenant`` section —
+  per-tenant goodput, migrations, and the arbitration-beats-independent
+  margin) must match the baseline exactly — the discrete-event simulation is
+  bit-reproducible, so any difference is a timing-model or engine drift, not
+  noise. A metric key present on one side only is also a failure: silently
+  added (or dropped) columns would otherwise escape the gate until the next
+  baseline refresh.
 * **Wall-clock rate** (``sim_req_per_wall_s`` of the scale section) must
   stay at or above ``WALL_RATE_TOLERANCE`` × baseline — a wide band, because
   absolute wall time varies by machine; the gate catches order-of-magnitude
@@ -51,6 +53,14 @@ EXACT_SECTIONS = ("table1", "modes", "openloop")
 #: compared exactly (the wall rate has its own tolerance band above)
 SCALE_VOLATILE_FIELDS = {"num_requests", "wall_s", "sim_req_per_wall_s",
                          "tail_throughput_rps", "sim_makespan_s"}
+#: multitenant rows run at full size, so only the wall clock is volatile;
+#: every simulated metric (per-tenant goodput, migrations, the
+#: arbitration-beats-independent margin) is compared exactly
+MT_VOLATILE_FIELDS = {"wall_s", "sim_req_per_wall_s"}
+#: sections with wall-clock-volatile rows: {section: its volatile fields};
+#: rows carrying ``sim_req_per_wall_s`` also get the wall-rate band
+WALL_SECTIONS = {"scale": frozenset(SCALE_VOLATILE_FIELDS),
+                 "multitenant": frozenset(MT_VOLATILE_FIELDS)}
 
 
 def _load_bench():
@@ -89,7 +99,7 @@ def diff_results(baseline: dict, current: dict,
     keys, tolerance boundaries) are unit-testable without a bench run."""
     problems: List[str] = []
 
-    for section in EXACT_SECTIONS + ("scale",):
+    for section in EXACT_SECTIONS + tuple(WALL_SECTIONS):
         if len(current.get(section, [])) != len(baseline.get(section, [])):
             problems.append(
                 f"{section}: {len(current.get(section, []))} row(s), "
@@ -101,18 +111,21 @@ def diff_results(baseline: dict, current: dict,
                               current.get(section, [])):
             _diff_row(section, brow, crow, frozenset(), problems)
 
-    volatile = frozenset(SCALE_VOLATILE_FIELDS)
-    for brow, crow in zip(baseline.get("scale", []),
-                          current.get("scale", [])):
-        cfg = brow.get("config", "?")
-        _diff_row("scale", brow, crow, volatile, problems)
-        floor = brow["sim_req_per_wall_s"] * wall_rate_tolerance
-        if crow["sim_req_per_wall_s"] < floor:
-            problems.append(
-                f"scale/{cfg}: {crow['sim_req_per_wall_s']:.0f} "
-                f"sim-req/wall-s < {floor:.0f} "
-                f"({wall_rate_tolerance:.0%} of baseline "
-                f"{brow['sim_req_per_wall_s']:.0f}) — hot-path regression")
+    for section, volatile in WALL_SECTIONS.items():
+        for brow, crow in zip(baseline.get(section, []),
+                              current.get(section, [])):
+            cfg = brow.get("config", "?")
+            _diff_row(section, brow, crow, volatile, problems)
+            if "sim_req_per_wall_s" not in brow:
+                continue
+            floor = brow["sim_req_per_wall_s"] * wall_rate_tolerance
+            if crow["sim_req_per_wall_s"] < floor:
+                problems.append(
+                    f"{section}/{cfg}: {crow['sim_req_per_wall_s']:.0f} "
+                    f"sim-req/wall-s < {floor:.0f} "
+                    f"({wall_rate_tolerance:.0%} of baseline "
+                    f"{brow['sim_req_per_wall_s']:.0f}) — "
+                    f"hot-path regression")
     return problems
 
 

@@ -4,11 +4,14 @@
 #   1. tier-1 pytest        (the suite every PR must keep green)
 #   2. check_docs.py        (public-API docstring lint for repro.core)
 #   3. perf marker          (pytest -m perf -> scripts/check_perf.py:
-#                            reduced benchmark vs committed BENCH_pipeline.json)
+#                            reduced benchmark vs committed BENCH_pipeline.json,
+#                            including the multitenant section — 3-tenant
+#                            shared-heap scale row + the arbitration-beats-
+#                            independent-replanning goodput comparison)
 #
 # Usage:  scripts/run_checks.sh [--skip-perf]
 #   --skip-perf  run only the fast gates (tier-1 + docs); the perf gate
-#                re-runs the pipeline benchmark and takes ~1 min.
+#                re-runs the pipeline benchmark and takes ~2 min.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -10,9 +10,11 @@ Components (paper §III):
 
 plus the simulated heterogeneous cluster (repro.core.cluster), the
 calibrated cost/timing model (repro.core.cost_model), the end-to-end
-pipeline runtime (repro.core.pipeline), and the event-driven request
+pipeline runtime (repro.core.pipeline), the event-driven request
 engine (repro.core.engine: overlapped transfers, micro-batching, 100k+
-request streams).
+request streams), and the multi-tenant serving core (repro.core.tenancy:
+tenants sharing one cluster, cross-model arbitration, partial
+migrations).
 """
 
 from repro.core.adaptation import (AdaptationConfig, AdaptationController,
@@ -23,15 +25,19 @@ from repro.core.cluster import (EdgeCluster, EdgeNode, make_paper_cluster,
                                 make_synthetic_cluster)
 from repro.core.cost_model import NodeProfile, PROFILES
 from repro.core.deployer import ModelDeployer
-from repro.core.engine import EngineConfig, PipelineEngine
-from repro.core.fabric import FairShareFabric
+from repro.core.engine import (EngineConfig, MultiTenantEngine,
+                               PipelineEngine)
+from repro.core.fabric import FairShareFabric, maxmin_rates
 from repro.core.monitor import NodeStats, ResourceMonitor
 from repro.core.partitioner import ModelPartitioner, Partition, PartitionPlan
 from repro.core.pipeline import DistributedInference, RunReport, run_monolithic
 from repro.core.planner import (NodeView, PartitionPlanner, PlannerConfig,
-                                PlanResult, node_views_from_cluster,
-                                node_views_from_stats)
+                                PlanResult, TenantPlanSpec,
+                                node_views_from_cluster,
+                                node_views_from_stats, plan_tenants)
 from repro.core.scheduler import TaskRequirements, TaskScheduler
+from repro.core.tenancy import (CrossTenantArbiter, MultiTenantReport,
+                                Tenant, TenantRegistry, TenantTraffic)
 from repro.core.traffic import (ArrivalProcess, BurstyArrivals,
                                 DeterministicArrivals, PoissonArrivals,
                                 TraceArrivals, adaptive_k)
@@ -42,12 +48,16 @@ __all__ = [
     "node_recovery",
     "ResultCache", "EdgeCluster", "EdgeNode", "make_paper_cluster",
     "make_synthetic_cluster", "NodeProfile", "PROFILES", "ModelDeployer",
-    "EngineConfig", "PipelineEngine", "FairShareFabric",
+    "EngineConfig", "MultiTenantEngine", "PipelineEngine",
+    "FairShareFabric", "maxmin_rates",
     "NodeStats", "ResourceMonitor", "ModelPartitioner", "Partition",
     "PartitionPlan", "DistributedInference", "RunReport", "run_monolithic",
     "NodeView", "PartitionPlanner", "PlannerConfig", "PlanResult",
-    "node_views_from_cluster", "node_views_from_stats",
+    "TenantPlanSpec", "node_views_from_cluster", "node_views_from_stats",
+    "plan_tenants",
     "TaskRequirements", "TaskScheduler",
+    "CrossTenantArbiter", "MultiTenantReport", "Tenant", "TenantRegistry",
+    "TenantTraffic",
     "ArrivalProcess", "BurstyArrivals", "DeterministicArrivals",
     "PoissonArrivals", "TraceArrivals", "adaptive_k",
 ]

@@ -61,6 +61,13 @@ class AdaptationConfig:
     redeploy_penalty_ms: float = 25.0   # per-moved-partition restart cost
     min_gain_ratio: float = 1.0         # gain must exceed cost * ratio
     cooldown_ms: float = POLL_INTERVAL_MS  # between voluntary migrations
+    #: stage-move budget for the partial-migration candidate ("move at most
+    #: k stages", cuts kept): 0 disables the cheap candidate entirely
+    partial_migration_k: int = 2
+    #: overload relief ceiling: on a sustained ``arrival-overload`` drift
+    #: the controller first doubles the engine's micro-batch cap (up to
+    #: this limit) and only migrates if the overload persists after that
+    batch_cap_limit: int = 32
     planner: PlannerConfig = field(default_factory=PlannerConfig)
 
 
@@ -80,7 +87,10 @@ class AdaptationEvent:
 @dataclass
 class MigrationDecision:
     """Outcome of one drift evaluation: whether to migrate, the competing
-    bottleneck predictions, and the candidate (plan, assignment) if any."""
+    bottleneck predictions, and the candidate (plan, assignment) if any.
+    ``partial`` marks the bounded "move at most k stages" candidate having
+    won over a full re-plan (``moved_stages`` counts the re-homed
+    stages)."""
     migrate: bool
     reason: str
     drifts: List[str]
@@ -90,6 +100,8 @@ class MigrationDecision:
     migration_cost_ms: float
     plan: Optional[PartitionPlan] = None
     assignment: Optional[List[str]] = None
+    partial: bool = False
+    moved_stages: int = 0
 
 
 # --- dynamic scenario events -------------------------------------------------
@@ -192,6 +204,22 @@ class AdaptationController:
         #: (sustained_polls > 32) can still accumulate enough consecutive
         #: windows for the arrival-overload drift to fire.
         self._rate_obs: deque = deque(maxlen=max(32, self.cfg.sustained_polls))
+        #: overload-relief micro-batch cap: None until a sustained
+        #: arrival-overload drift raises it; the engine reads it every
+        #: batch formation (see PipelineEngine). Reset per stream.
+        self.batch_cap: Optional[int] = None
+        #: the engine run's static micro_batch — the base the relief
+        #: doubles from (set by begin_stream at event-run start)
+        self.stream_micro_batch = 1
+
+    def begin_stream(self, micro_batch: int) -> None:
+        """Engine hook at event-run start: remember the stream's static
+        micro-batch cap (the base the overload relief doubles from) and
+        reset per-stream traffic state — rate observations and any raised
+        cap from a previous stream."""
+        self.stream_micro_batch = micro_batch
+        self.batch_cap = None
+        self.reset_rates()
 
     def observe_rates(self, offered_rps: float,
                       completed_rps: float) -> None:
@@ -285,10 +313,36 @@ class AdaptationController:
                                       scheduler=self.pipeline.scheduler)
         result = self.planner.plan(views, batch=self.pipeline.batch,
                                    calibration=self.partitioner.calibration,
-                                   speedup=self.deployer.speedup)
+                                   speedup=self.deployer.speedup,
+                                   committed_ms=self.pipeline.committed_ms,
+                                   weight=self.pipeline.tenant.traffic.weight)
         if result is None:
             return None, None
         return self.partitioner.plan_from_cuts(result.cuts), result.assignment
+
+    def _partial_candidate(self, stats: Dict[str, NodeStats]):
+        """The bounded-migration candidate: keep the current plan's cuts,
+        move at most ``cfg.partial_migration_k`` stages
+        (``PartitionPlanner.plan_partial``). Returns (assignment,
+        moved_stages) or (None, 0) when disabled or no move helps."""
+        k = self.cfg.partial_migration_k
+        plan = self.pipeline.plan
+        if k <= 0 or plan is None:
+            return None, 0
+        views = node_views_from_stats(stats, self.cluster,
+                                      scheduler=self.pipeline.scheduler)
+        parts = plan.partitions
+        cuts = [p.lo for p in parts] + [parts[-1].hi]
+        current = [self.pipeline.placement[p.index] for p in parts]
+        res = self.planner.plan_partial(
+            views, cuts, current, k, batch=self.pipeline.batch,
+            calibration=self.partitioner.calibration,
+            speedup=self.deployer.speedup,
+            committed_ms=self.pipeline.committed_ms,
+            weight=self.pipeline.tenant.traffic.weight)
+        if res is None or res.moved_stages == 0:
+            return None, 0
+        return res.assignment, res.moved_stages
 
     def evaluate(self, force_poll: bool = False) -> Optional[MigrationDecision]:
         """Run one control-loop iteration; returns the decision if drift was
@@ -325,6 +379,26 @@ class AdaptationController:
             self._log(now, "drift", d)
 
         service_down = any(d.startswith("offline:") for d in drifts)
+        # overload relief valve: a pure arrival-overload drift (no node-
+        # level signal) is first answered by raising the engine's
+        # micro-batch cap — deeper amortization of the fixed per-inference
+        # overhead buys completion rate without paying any transfer cost.
+        # Only when the overload persists through a full fresh sustained
+        # window at the capped batch size does the controller migrate.
+        if (not service_down
+                and drifts and all(d == "arrival-overload" for d in drifts)):
+            cap = self.batch_cap or self.stream_micro_batch
+            if cap < self.cfg.batch_cap_limit:
+                self.batch_cap = min(self.cfg.batch_cap_limit,
+                                     max(2, cap * 2))
+                self.reset_rates()   # judge persistence over a fresh window
+                self._log(now, "batch-cap",
+                          f"arrival-overload: micro-batch cap -> "
+                          f"{self.batch_cap} (migrate only if overload "
+                          f"persists)")
+                return MigrationDecision(False, "batch-cap-raised", drifts,
+                                         math.nan, math.nan, 0.0, 0.0)
+
         if (not service_down
                 and now - self._last_migration_ms < self.cfg.cooldown_ms):
             return MigrationDecision(False, "cooldown", drifts,
@@ -343,11 +417,33 @@ class AdaptationController:
         cost = self._predicted_migration_cost_ms(plan, assignment)
         gain = ((cur - cand) * self.cfg.amortize_requests
                 if math.isfinite(cur) else math.inf)
+        partial, moved = False, 0
+        if not service_down:
+            # the cheap candidate: same cuts, at most k stages re-homed —
+            # preferred when its net gain beats the full re-plan's (a full
+            # re-plan re-ships most of the model; the partial ships only
+            # the moved stages' parameters)
+            p_assign, p_moved = self._partial_candidate(stats)
+            if p_assign is not None:
+                p_cand = self._predicted_bottleneck_ms(
+                    self.pipeline.plan.partitions,
+                    {i: nid for i, nid in enumerate(p_assign)})
+                p_cost = self.deployer.predicted_migration_ms(
+                    self.pipeline.plan, p_assign,
+                    self.cfg.redeploy_penalty_ms)
+                p_gain = ((cur - p_cand) * self.cfg.amortize_requests
+                          if math.isfinite(cur) else math.inf)
+                ratio = self.cfg.min_gain_ratio
+                if (p_gain - p_cost * ratio) > (gain - cost * ratio):
+                    plan, assignment = self.pipeline.plan, p_assign
+                    cand, cost, gain = p_cand, p_cost, p_gain
+                    partial, moved = True, p_moved
         migrate = service_down or gain > cost * self.cfg.min_gain_ratio
         reason = ("service-down" if service_down else
                   "gain-exceeds-cost" if migrate else "gain-below-cost")
         return MigrationDecision(migrate, reason, drifts, cur, cand,
-                                 gain, cost, plan, assignment)
+                                 gain, cost, plan, assignment,
+                                 partial=partial, moved_stages=moved)
 
     def apply(self, decision: MigrationDecision) -> None:
         """Live migration: deployer switches plans; the pipeline routes new
@@ -360,13 +456,21 @@ class AdaptationController:
         now = self.cluster.clock.now_ms
         self.migrations += 1
         self._last_migration_ms = now
+        # a migration changes the placement every silenced drift was judged
+        # against — un-silence here (not in maybe_adapt) so the arbiter's
+        # direct apply() path re-evaluates persistent drifts too
+        self._last_skipped_drifts = None
         self._planned_calibration = self.partitioner.calibration
         self._planned_caps = {nid: s.capability
                               for nid, s in self.monitor.snapshots.items()}
+        kind_detail = (f"partial({decision.moved_stages} stage(s)) -> "
+                       if decision.partial else
+                       f"{len(decision.plan.partitions)}-way -> ")
         self._log(now, "migrate",
-                  f"{len(decision.plan.partitions)}-way -> "
-                  f"{assignment_str(placed)} ({decision.reason})",
+                  kind_detail
+                  + f"{assignment_str(placed)} ({decision.reason})",
                   data=dict(
+                      partial_moves=decision.moved_stages,
                       bottleneck_before_ms=round(decision.current_bottleneck_ms, 2)
                       if math.isfinite(decision.current_bottleneck_ms) else "inf",
                       bottleneck_after_ms=round(decision.candidate_bottleneck_ms, 2),
@@ -387,8 +491,48 @@ class AdaptationController:
         for events that must not wait out the poll interval. Delegates to
         :meth:`maybe_adapt`, so the decision logic is identical on both
         cadences."""
-        self.engine_events[kind] = self.engine_events.get(kind, 0) + 1
+        self.note_engine_event(kind)
         return self.maybe_adapt(force_poll=force_poll)
+
+    def note_engine_event(self, kind: str) -> None:
+        """Tally an engine event without running the control loop — the
+        cross-tenant arbiter (``core.tenancy``) drives evaluate/apply
+        itself but must keep the telemetry counters identical to the
+        independent path."""
+        self.engine_events[kind] = self.engine_events.get(kind, 0) + 1
+
+    def note_skip(self, decision: MigrationDecision) -> None:
+        """Bookkeeping for a non-applied decision: silence exact-repeat
+        persistent drifts and re-anchor the capacity/calibration baselines
+        so the judged-not-actionable signal doesn't re-fire every poll.
+        Cooldown and batch-cap decisions are excluded — neither judged the
+        drift itself. Shared by :meth:`maybe_adapt` and the arbiter (for
+        tenants whose decision was migrate=False)."""
+        if decision.reason in ("cooldown", "batch-cap-raised"):
+            return
+        self._last_skipped_drifts = tuple(decision.drifts)
+        if decision.reason == "gain-below-cost":   # no-capacity logs itself
+            self._log(self.cluster.clock.now_ms, "skip",
+                      f"{decision.reason}: gain "
+                      f"{decision.predicted_gain_ms:.1f}ms <= cost "
+                      f"{decision.migration_cost_ms:.1f}ms",
+                      data=dict(drifts=decision.drifts))
+        # the drift was considered and judged not worth acting on; anchor
+        # the baseline so the same signal doesn't re-fire every poll
+        self._planned_calibration = self.partitioner.calibration
+        self._planned_caps = {nid: s.capability
+                              for nid, s in self.monitor.snapshots.items()}
+
+    def defer(self, decision: MigrationDecision, detail: str) -> None:
+        """Arbitration outcome: the decision wanted to migrate but another
+        tenant's migration won this control tick. Log the deferral
+        *without* anchoring baselines or silencing the drift — the tenant
+        re-enters the next arbitration tick with fresh telemetry (by which
+        time the winner's load shift is visible)."""
+        self._log(self.cluster.clock.now_ms, "skip",
+                  f"{detail}: gain {decision.predicted_gain_ms:.1f}ms, "
+                  f"cost {decision.migration_cost_ms:.1f}ms",
+                  data=dict(drifts=decision.drifts))
 
     def maybe_adapt(self, force_poll: bool = False) -> Optional[MigrationDecision]:
         """One full control-loop step: evaluate drift and apply the migration
@@ -398,21 +542,9 @@ class AdaptationController:
         if decision is None:
             return None
         if decision.migrate:
-            self.apply(decision)
-            self._last_skipped_drifts = None
-        elif decision.reason != "cooldown":
-            self._last_skipped_drifts = tuple(decision.drifts)
-            if decision.reason == "gain-below-cost":   # no-capacity logs itself
-                self._log(self.cluster.clock.now_ms, "skip",
-                          f"{decision.reason}: gain "
-                          f"{decision.predicted_gain_ms:.1f}ms <= cost "
-                          f"{decision.migration_cost_ms:.1f}ms",
-                          data=dict(drifts=decision.drifts))
-            # the drift was considered and judged not worth acting on; anchor
-            # the baseline so the same signal doesn't re-fire every poll
-            self._planned_calibration = self.partitioner.calibration
-            self._planned_caps = {nid: s.capability
-                                  for nid, s in self.monitor.snapshots.items()}
+            self.apply(decision)   # apply() un-silences skipped drifts
+        else:
+            self.note_skip(decision)
         return decision
 
     # --- reporting ------------------------------------------------------------

@@ -76,6 +76,10 @@ class EdgeNode:
         self.pending: deque = deque()
         self.engine_busy = False
         self.tx_free_ms = 0.0
+        # tenancy: cumulative execution time charged per tenant (the
+        # engine attributes every execution to the owning tenant, so a
+        # shared node's capacity split across models is observable)
+        self.tenant_busy_ms: Dict[str, float] = {}
 
     # --- telemetry (consumed by the Resource Monitor) ---
 

@@ -29,28 +29,52 @@ OPT_LEVELS = {
 
 @dataclass
 class Deployment:
-    """One partition resident on one node, with its shipping cost."""
+    """One partition resident on one node, with its shipping cost and the
+    owning tenant's tag (the tenancy layer's committed-memory unit)."""
     partition: Partition
     node_id: str
     opt_level: str
     transfer_ms: float
     active: bool = True
+    tenant: str = ""
 
 
 class ModelDeployer:
     """Paper §III-D: places partitions (via the NSA), charges model
     transfer, applies the optimization level, and handles redeploys and
-    live migration."""
+    live migration. Every deployment is tagged with the owning tenant so
+    the tenancy layer (``core.tenancy``) can attribute committed node
+    memory per model."""
 
     def __init__(self, cluster: EdgeCluster, monitor: ResourceMonitor,
-                 scheduler: TaskScheduler, opt_level: str = "none"):
+                 scheduler: TaskScheduler, opt_level: str = "none",
+                 tenant: str = ""):
         assert opt_level in OPT_LEVELS
         self.cluster = cluster
         self.monitor = monitor
         self.scheduler = scheduler
         self.opt_level = opt_level
+        self.tenant = tenant               # tag stamped on every deployment
         self.deployments: Dict[int, Deployment] = {}
         self.redeploy_events: List[str] = []
+
+    def committed_mb(self, tenant: Optional[str] = None,
+                     node_id: Optional[str] = None) -> Dict[str, float]:
+        """Active deployment memory ({node_id: MB}), filterable by tenant
+        tag and node — the registry's per-tenant committed-memory view,
+        derived from the same records the migration economics use."""
+        shrink = OPT_LEVELS[self.opt_level][1]
+        out: Dict[str, float] = {}
+        for d in self.deployments.values():
+            if not d.active:
+                continue
+            if tenant is not None and d.tenant != tenant:
+                continue
+            if node_id is not None and d.node_id != node_id:
+                continue
+            mb = d.partition.params_bytes * shrink / (1024 * 1024)
+            out[d.node_id] = out.get(d.node_id, 0.0) + mb
+        return out
 
     @property
     def speedup(self) -> float:
@@ -85,7 +109,8 @@ class ModelDeployer:
             shrink = OPT_LEVELS[self.opt_level][1]
             t_ms = node.receive(part.params_bytes * shrink)
             node.mem_used_bytes += part.params_bytes * shrink
-            self.deployments[part.index] = Deployment(part, node_id, self.opt_level, t_ms)
+            self.deployments[part.index] = Deployment(
+                part, node_id, self.opt_level, t_ms, tenant=self.tenant)
             placed[part.index] = node_id
         return placed
 
@@ -148,7 +173,9 @@ class ModelDeployer:
             node_id = assignment[part.index]
             placed[part.index] = node_id
             if part.index not in ship_idx:
-                new_deps[part.index] = Deployment(part, node_id, self.opt_level, 0.0)
+                new_deps[part.index] = Deployment(part, node_id,
+                                                  self.opt_level, 0.0,
+                                                  tenant=self.tenant)
                 reused_keys.add((part.lo, part.hi, node_id))
         for d in self.deployments.values():   # old partitions not carried over
             key = (d.partition.lo, d.partition.hi, d.node_id)
@@ -168,7 +195,8 @@ class ModelDeployer:
             # in simulated time, not just in the controller's economics)
             node.busy_until_ms = max(node.busy_until_ms, now) + t
             new_deps[part.index] = Deployment(part, placed[part.index],
-                                              self.opt_level, t)
+                                              self.opt_level, t,
+                                              tenant=self.tenant)
             cost_ms += t
             self.redeploy_events.append(
                 f"partition {part.index} -> {placed[part.index]} (migrate)")
@@ -215,7 +243,8 @@ class ModelDeployer:
                 node.busy_until_ms = max(node.busy_until_ms,
                                          self.cluster.clock.now_ms) + t
                 self.deployments[i] = Deployment(d.partition, new_node,
-                                                 self.opt_level, t)
+                                                 self.opt_level, t,
+                                                 tenant=d.tenant)
                 moved.append(i)
                 self.redeploy_events.append(
                     f"partition {i}: {node_id} -> {new_node}")

@@ -60,6 +60,24 @@ Link contention (``EngineConfig.fabric``):
     concurrent transfers into one receiver split its downlink bandwidth,
     re-divided on every flow start/finish. A run in which no two flows
     ever overlap on a link is bit-for-bit identical to ``isolated``.
+``maxmin``
+    Dual-endpoint max-min fairness: every flow is constrained by both
+    its sender's uplink and its receiver's downlink
+    (``FairShareFabric(shared_uplinks=True)``); the overlap mode's tx
+    FIFO gating is dropped, since the uplink itself now arbitrates
+    concurrent sends. Solo flows keep isolated-accounting bit parity.
+
+**Multi-tenant streams.** The event loop is written over *streams* — one
+per tenant, each carrying its own plan tables, metric columns, RNG,
+cache, and admission window (``_Stream``). A single-tenant run is
+exactly one stream, so the tenancy generalization costs the solo path
+nothing and cannot drift it; :class:`MultiTenantEngine` runs N tenants'
+streams through one shared heap, interleaving their requests on shared
+per-node FIFO queues and the shared fabric (``core.tenancy`` is the
+user-facing layer). At poll ticks each tenant's controller sees the
+other tenants' current per-node time budgets (``committed_ms``), and an
+optional cross-tenant arbiter applies only the best-net-gain migration
+per tick.
 
 Request streams are **closed-loop** by default (request r submits when
 r-W finishes — the paper's evaluation mode). Passing an
@@ -98,8 +116,9 @@ from repro.core.traffic import ArrivalProcess, adaptive_k
 #: transfer resource models, cheapest-semantics first (see module docstring)
 TRANSFER_MODES = ("legacy", "serial", "overlap")
 
-#: link-contention models: isolated per-message charge vs fair-shared links
-FABRIC_MODES = ("isolated", "shared")
+#: link-contention models: isolated per-message charge, fair-shared
+#: receiver downlinks, or dual-endpoint (uplink + downlink) max-min
+FABRIC_MODES = ("isolated", "shared", "maxmin")
 
 # heap-event priorities: fixed tie-break order at equal simulated time.
 # _P_XFER covers both fabric bandwidth-completion and delivery events;
@@ -113,12 +132,15 @@ class EngineConfig:
     """Execution policy of one engine run.
 
     ``transfer``: one of :data:`TRANSFER_MODES`. ``micro_batch``: maximum
-    queued same-stage requests coalesced into one execution (1 = off).
+    queued same-stage requests coalesced into one execution (1 = off; an
+    ``AdaptationController`` relieving sustained arrival overload may
+    raise the effective cap mid-run via ``controller.batch_cap``).
     ``fabric``: one of :data:`FABRIC_MODES` — isolated per-message link
-    charge vs progress-based fair sharing of each receiver's downlink.
+    charge, fair sharing of each receiver's downlink, or dual-endpoint
+    (sender uplink + receiver downlink) max-min fairness.
     ``adaptive_batch``: cap each batch at ``traffic.adaptive_k`` of the
-    node's queue depth instead of always taking ``micro_batch`` (which
-    then acts as the upper bound).
+    served *stage's* queued backlog instead of always taking
+    ``micro_batch`` (which then acts as the upper bound).
     The default configuration (``legacy``, 1, ``isolated``) reproduces the
     seed loop's per-request timing bit-for-bit.
     """
@@ -141,7 +163,8 @@ class StageEntry:
 
     __slots__ = ("index", "node", "exec_ms", "xfer_ms", "out_bytes",
                  "recv_node", "key_prefix", "cache_value", "next_index",
-                 "pending_execs", "_part", "_table", "_exec_k", "_xfer_k")
+                 "pending_execs", "queued", "_part", "_table", "_exec_k",
+                 "_xfer_k")
 
     def __init__(self, table: "StageTable", part, node, recv_node):
         self.index = part.index
@@ -161,6 +184,7 @@ class StageEntry:
         self.cache_value = (part.lo, part.hi)
         self.next_index = part.index + 1 if recv_node is not None else None
         self.pending_execs = 0                # scheduler feed since last poll
+        self.queued = 0                       # this stage's queued backlog
         self._exec_k: Dict[int, float] = {}
         self._xfer_k: Dict[int, float] = {}
 
@@ -209,6 +233,7 @@ class StageTable:
         self.plan = pipeline.plan
         self.placement_src = pipeline.placement
         self.epoch = epoch
+        self.stream = None          # owning _Stream, stamped by the loop
         self.partitioner = pipeline.partitioner
         self.batch = pipeline.batch
         self.speedup = pipeline.deployer.speedup
@@ -319,12 +344,14 @@ class PipelineEngine:
         migration, in-flight work draining on the superseded plan still
         counts."""
         sched = self.pipe.scheduler
+        tenant = self.pipe.tenant.name
         for table in self._tables:
             for st in table.stages:
                 if st.pending_execs:
                     sched.bulk_complete(st.node.node_id, st.exec_ms,
                                         st.pending_execs,
-                                        predicted_ms=st.exec_ms)
+                                        predicted_ms=st.exec_ms,
+                                        tenant=tenant)
                     st.pending_execs = 0
 
     # --- entry point ----------------------------------------------------------
@@ -358,14 +385,28 @@ class PipelineEngine:
                 fabric_stats: Optional[dict] = None,
                 batch_hist: Optional[dict] = None) -> RunReport:
         """Common end-of-run bookkeeping: advance the clock to the last
-        finish, apply scenario events the stream never reached, flush the
-        scheduler feed, take the final forced poll, and aggregate the
-        cluster-level Table-I columns (exactly the legacy loop's tail)."""
+        finish, apply scenario events the stream never reached, then the
+        per-stream tail (:meth:`_stream_report`). Single-stream epilogue;
+        the multi-tenant runner applies the clock/scenario part once for
+        all streams and calls ``_stream_report`` per tenant."""
         p = self.pipe
         clock = p.cluster.clock
         clock.now_ms = max(clock.now_ms, float(cols.finish_ms.max()))
         for ev in leftover_events:
             apply_scenario_event(p.cluster, ev)
+        return self._stream_report(name, cols, total_net, queue_depth,
+                                   fabric_stats, batch_hist)
+
+    def _stream_report(self, name: str, cols: RequestColumns,
+                       total_net: float,
+                       queue_depth: Optional[tuple] = None,
+                       fabric_stats: Optional[dict] = None,
+                       batch_hist: Optional[dict] = None) -> RunReport:
+        """Per-stream tail of the run epilogue: flush the scheduler feed,
+        prune drained stage tables, take the final forced poll, and
+        aggregate the cluster-level Table-I columns (exactly the legacy
+        loop's tail)."""
+        p = self.pipe
         self._flush_sched()
         # every request has finished, so superseded tables are fully drained
         # and cannot accrue further feedback — prune them or a long-lived
@@ -501,10 +542,10 @@ class PipelineEngine:
                     cfg: EngineConfig,
                     arrivals: Optional[ArrivalProcess] = None) -> RunReport:
         """Heap-driven event loop for the serial/overlap transfer models,
-        micro-batching, shared-bandwidth links, and open-loop arrivals:
-        explicit compute / transfer events, per-node FIFO work queues, and
-        control (scenario events, monitor polls, the adaptation controller)
-        firing at simulated times rather than submit boundaries.
+        micro-batching, shared-bandwidth links, and open-loop arrivals —
+        one :class:`_Stream` through the shared multi-tenant loop
+        (:func:`_run_event_streams`), so single-tenant and interleaved
+        multi-tenant runs execute the identical code path.
 
         With ``arrivals`` set the stream is open-loop: every request's
         arrival time is fixed by the process up front, ``concurrency``
@@ -513,226 +554,331 @@ class PipelineEngine:
         sojourn time), and the controller is fed arrival-rate vs
         completion-rate observations at every poll tick (the overload
         drift trigger)."""
-        p = self.pipe
-        cluster = p.cluster
-        clock = cluster.clock
-        monitor, scheduler, controller = p.monitor, p.scheduler, p.controller
-        if controller is not None:
-            controller.reset_rates()   # a new stream, fresh traffic state
-        cache = p.cache
-        mode = cfg.transfer
-        kmax = cfg.micro_batch
-        adaptive = cfg.adaptive_batch
-        fabric = FairShareFabric() if cfg.fabric == "shared" else None
-        rng = np.random.default_rng(seed)
-        pattern_pool = [f"pattern-{i}" for i in range(8)]
-        cols = RequestColumns(num_requests)
-        comm = [0.0] * num_requests
-        service = [0.0] * num_requests
-        hits = [0] * num_requests
-        sigs: List[Optional[str]] = [None] * num_requests
-        total_net = 0.0
-        done = 0
-        arrived = 0                  # requests that entered the system
-        in_flight = 0                # open-loop: admitted, not yet finished
-        admit_q: deque = deque()
-        qd_t: List[float] = []       # queue-depth series (poll-tick samples)
-        qd_n: List[int] = []
-        bhist: Dict[int, int] = {}   # micro-batch size -> executions
-        t0 = clock.now_ms
-        last_rate_t, last_arr, last_done = t0, 0, 0
-        heap: list = []
-        seq = itertools.count()
+        stream = _Stream(self, num_requests, name, repeat_rate, seed,
+                         concurrency, arrivals)
+        leftover, fabric = _run_event_streams(self.pipe.cluster, [stream],
+                                              cfg, scenario)
+        return self._report(
+            name, stream.cols, stream.total_net, num_requests, leftover,
+            queue_depth=(np.asarray(stream.qd_t, dtype=np.float64),
+                         np.asarray(stream.qd_n, dtype=np.int64)),
+            fabric_stats=fabric.stats() if fabric is not None else None,
+            batch_hist=dict(sorted(stream.bhist.items())))
 
-        for ev in sorted(scenario or [], key=lambda e: e.at_ms):
-            heapq.heappush(heap, (max(ev.at_ms, t0), _P_SCENARIO,
-                                  next(seq), ev))
-        heapq.heappush(heap, (t0, _P_POLL, next(seq), None))
-        if arrivals is None:
-            for r in range(min(concurrency, num_requests)):
-                heapq.heappush(heap, (t0, _P_SUBMIT, next(seq), r))
+
+class _Stream:
+    """Per-tenant run state inside the shared event loop: the tenant's
+    engine (stage-table cache + invalidation), metric columns, RNG,
+    signature pool, admission window, and rate-observation bookkeeping.
+    A single-tenant run is exactly one stream; the multi-tenant loop is
+    the same code over N of them."""
+
+    __slots__ = ("engine", "pipe", "name", "n", "repeat_rate", "concurrency",
+                 "arrivals", "controller", "monitor", "scheduler", "cache",
+                 "tenant_name", "rng", "pattern_pool", "cols", "comm",
+                 "service", "hits", "sigs", "total_net", "done", "arrived",
+                 "in_flight", "admit_q", "at_arr", "qd_t", "qd_n", "bhist",
+                 "last_rate_t", "last_arr", "last_done")
+
+    def __init__(self, engine: "PipelineEngine", n: int, name: str,
+                 repeat_rate: float, seed: int, concurrency: int,
+                 arrivals: Optional[ArrivalProcess]):
+        assert n > 0, "empty request stream"
+        assert concurrency >= 1, "in-flight window must be >= 1"
+        self.engine = engine
+        p = engine.pipe
+        self.pipe = p
+        self.name = name
+        self.n = n
+        self.repeat_rate = repeat_rate
+        self.concurrency = concurrency
+        self.arrivals = arrivals
+        self.controller = p.controller
+        self.monitor = p.monitor
+        self.scheduler = p.scheduler
+        self.cache = p.cache
+        self.tenant_name = p.tenant.name
+        self.rng = np.random.default_rng(seed)
+        self.pattern_pool = [f"pattern-{i}" for i in range(8)]
+        self.cols = RequestColumns(n)
+        self.comm = [0.0] * n
+        self.service = [0.0] * n
+        self.hits = [0] * n
+        self.sigs: List[Optional[str]] = [None] * n
+        self.total_net = 0.0
+        self.done = 0
+        self.arrived = 0             # requests that entered the system
+        self.in_flight = 0           # open-loop: admitted, not yet finished
+        self.admit_q: deque = deque()
+        self.at_arr: Optional[list] = None   # open-loop arrival times
+        self.qd_t: List[float] = []  # queue-depth series (poll-tick samples)
+        self.qd_n: List[int] = []
+        self.bhist: Dict[int, int] = {}      # micro-batch size -> executions
+        self.last_rate_t = 0.0
+        self.last_arr = 0
+        self.last_done = 0
+
+
+def _committed_excluding(streams: Sequence["_Stream"],
+                         me: "_Stream") -> Optional[Dict[str, float]]:
+    """Per-node time budget of every stream's tenant except ``me`` —
+    refreshed at poll ticks so mid-run re-planning sees the other
+    tenants' *current* plans rather than a deploy-time snapshot. Thin
+    wrapper over the tenancy layer's shared ``committed_budgets``."""
+    from repro.core.tenancy import committed_budgets
+    return committed_budgets([s.pipe.tenant for s in streams],
+                             exclude=me.pipe.tenant) or None
+
+
+def _run_event_streams(cluster, streams: Sequence["_Stream"],
+                       cfg: EngineConfig,
+                       scenario: Optional[Sequence[ScenarioEvent]],
+                       arbiter=None):
+    """The shared heap event loop: explicit compute / transfer events,
+    per-node FIFO work queues shared by every stream, and control
+    (scenario events, monitor polls, adaptation) firing at simulated
+    times. One stream is a plain single-tenant event run; several streams
+    interleave their requests on the shared nodes and fabric while each
+    keeps its own plan tables, cache, RNG, and admission window.
+
+    Returns ``(leftover_scenario_events, fabric)``; per-stream results
+    (metric columns, queue-depth series, batch histogram, total network
+    bytes) land on the stream objects. With ``arbiter`` set (multi-tenant
+    adaptive runs), control ticks route through the cross-tenant arbiter
+    instead of each stream's own controller."""
+    clock = cluster.clock
+    mode = cfg.transfer
+    kmax = cfg.micro_batch
+    adaptive = cfg.adaptive_batch
+    fabric = (FairShareFabric(shared_uplinks=cfg.fabric == "maxmin")
+              if cfg.fabric in ("shared", "maxmin") else None)
+    multi = len(streams) > 1
+    for s in streams:
+        if s.controller is not None:
+            s.controller.begin_stream(kmax)   # fresh per-stream traffic state
+    done_total = 0
+    total_n = sum(s.n for s in streams)
+    t0 = clock.now_ms
+    heap: list = []
+    seq = itertools.count()
+
+    for ev in sorted(scenario or [], key=lambda e: e.at_ms):
+        heapq.heappush(heap, (max(ev.at_ms, t0), _P_SCENARIO,
+                              next(seq), ev))
+    heapq.heappush(heap, (t0, _P_POLL, next(seq), None))
+    for s in streams:
+        s.last_rate_t = t0
+        if s.arrivals is None:
+            for r in range(min(s.concurrency, s.n)):
+                heapq.heappush(heap, (t0, _P_SUBMIT, next(seq), (s, r)))
         else:
-            offs = np.asarray(arrivals.offsets(num_requests),
-                              dtype=np.float64)
-            assert len(offs) == num_requests, (
+            offs = np.asarray(s.arrivals.offsets(s.n), dtype=np.float64)
+            assert len(offs) == s.n, (
                 f"arrival process produced {len(offs)} offsets for "
-                f"{num_requests} requests")
+                f"{s.n} requests")
             assert bool(np.all(np.diff(offs) >= 0)), \
                 "arrival offsets must be non-decreasing"
-            cols.arrival_ms[:] = t0 + offs
-            at_arr = cols.arrival_ms.tolist()    # python floats for the heap
+            s.cols.arrival_ms[:] = t0 + offs
+            s.at_arr = s.cols.arrival_ms.tolist()  # python floats, heap keys
             # arrivals are chained (each event pushes its successor), so the
-            # heap holds one pending arrival instead of all num_requests —
+            # heap holds one pending arrival per stream instead of all n —
             # the event count is unchanged but the heap stays depth-O(W)
-            heapq.heappush(heap, (at_arr[0], _P_ARRIVAL, next(seq), 0))
+            heapq.heappush(heap, (s.at_arr[0], _P_ARRIVAL, next(seq), (s, 0)))
 
-        # ensure engine queue/busy state is clean for the placement nodes
-        for node in cluster.nodes.values():
-            node.pending.clear()
-            node.engine_busy = False
-            if node.tx_free_ms < t0:
-                node.tx_free_ms = t0
+    # ensure engine queue/busy state is clean for the placement nodes
+    for node in cluster.nodes.values():
+        node.pending.clear()
+        node.engine_busy = False
+        if node.tx_free_ms < t0:
+            node.tx_free_ms = t0
 
-        def try_start(node, now: float) -> None:
-            # deliberately no node.online check: queued items were admitted
-            # under a plan captured at their submit, and that cohort drains
-            # on it even past a death event — the legacy loop computes these
-            # same executions eagerly at submit time (new submits against a
-            # dead, unrepaired placement raise in the SUBMIT handler)
-            if node.engine_busy or not node.pending:
-                return
-            q = node.pending
-            kcap = adaptive_k(len(q), kmax) if adaptive else kmax
-            st, first = q.popleft()
-            batch = [first]
-            while len(batch) < kcap and q and q[0][0] is st:
-                batch.append(q.popleft()[1])
-            k = len(batch)
-            bhist[k] = bhist.get(k, 0) + 1
-            start = node.busy_until_ms
-            if now > start:
-                start = now
-            dur = st.exec_for(k)
-            end = start + dur
-            node.engine_busy = True
-            node.busy_until_ms = end
-            node.cpu_busy_ms += dur
-            node.task_count += k
-            # per-request share, not the whole batch duration: the monitor's
-            # stability heuristic flags executions > 2000 ms as saturation,
-            # and a k-batch taking k× longer is not saturation — recording
-            # the raw batch time would degrade capability (and trigger
-            # spurious migrations) merely for enabling micro-batching
-            node.recent_exec.append(dur if k == 1 else dur / k)
-            st.pending_execs += k
-            heapq.heappush(heap, (end, _P_CDONE, next(seq),
-                                  (node, st, batch, dur)))
+    def try_start(node, now: float) -> None:
+        # deliberately no node.online check: queued items were admitted
+        # under a plan captured at their submit, and that cohort drains
+        # on it even past a death event — the legacy loop computes these
+        # same executions eagerly at submit time (new submits against a
+        # dead, unrepaired placement raise in the SUBMIT handler)
+        if node.engine_busy or not node.pending:
+            return
+        q = node.pending
+        st, first = q[0]
+        stream = st._table.stream
+        ctrl = stream.controller
+        km = kmax
+        if (ctrl is not None and ctrl.batch_cap is not None
+                and ctrl.batch_cap > km):
+            km = ctrl.batch_cap     # overload relief raised the cap mid-run
+        # per-STAGE backlog target: the adaptive cap follows this stage's
+        # queued count, not the whole node queue — a node hosting two
+        # tenants' stages no longer inflates one stage's batch because the
+        # *other* stage has backlog (head-of-batch latency stays bounded)
+        kcap = adaptive_k(st.queued, km) if adaptive else km
+        q.popleft()
+        st.queued -= 1
+        batch = [first]
+        while len(batch) < kcap and q and q[0][0] is st:
+            batch.append(q.popleft()[1])
+            st.queued -= 1
+        k = len(batch)
+        stream.bhist[k] = stream.bhist.get(k, 0) + 1
+        start = node.busy_until_ms
+        if now > start:
+            start = now
+        dur = st.exec_for(k)
+        end = start + dur
+        node.engine_busy = True
+        node.busy_until_ms = end
+        node.cpu_busy_ms += dur
+        node.task_count += k
+        tb = node.tenant_busy_ms
+        tb[stream.tenant_name] = tb.get(stream.tenant_name, 0.0) + dur
+        # per-request share, not the whole batch duration: the monitor's
+        # stability heuristic flags executions > 2000 ms as saturation,
+        # and a k-batch taking k× longer is not saturation — recording
+        # the raw batch time would degrade capability (and trigger
+        # spurious migrations) merely for enabling micro-batching
+        node.recent_exec.append(dur if k == 1 else dur / k)
+        st.pending_execs += k
+        heapq.heappush(heap, (end, _P_CDONE, next(seq),
+                              (node, st, batch, dur)))
 
-        def finish_request(r: int, t: float) -> None:
-            nonlocal done, in_flight
-            cols.finish_ms[r] = t
-            done += 1
-            if arrivals is None:       # closed loop: r's finish submits r+W
-                nxt = r + concurrency
-                if nxt < num_requests:
-                    heapq.heappush(heap, (t, _P_SUBMIT, next(seq), nxt))
-            else:                      # open loop: a slot frees; admit FIFO
-                in_flight -= 1
-                if admit_q:
-                    in_flight += 1
-                    heapq.heappush(heap, (t, _P_SUBMIT, next(seq),
-                                          admit_q.popleft()))
+    def finish_request(s: "_Stream", r: int, t: float) -> None:
+        nonlocal done_total
+        s.cols.finish_ms[r] = t
+        s.done += 1
+        done_total += 1
+        if s.arrivals is None:     # closed loop: r's finish submits r+W
+            nxt = r + s.concurrency
+            if nxt < s.n:
+                heapq.heappush(heap, (t, _P_SUBMIT, next(seq), (s, nxt)))
+        else:                      # open loop: a slot frees; admit FIFO
+            s.in_flight -= 1
+            if s.admit_q:
+                s.in_flight += 1
+                heapq.heappush(heap, (t, _P_SUBMIT, next(seq),
+                                      (s, s.admit_q.popleft())))
 
-        def route(table: StageTable, idx: int, rs: List[int],
-                  t: float) -> None:
-            """Deliver requests to stage ``idx``: resolve cache-hit chains
-            per request, then enqueue the remainder on the stage's node."""
-            if cache is None:              # no per-request divergence: bulk
-                st = table.stages[idx]
-                pend = st.node.pending
-                for r in rs:
-                    pend.append((st, r))
-                try_start(st.node, t)
-                return
-            touched = []                 # nodes to start, in enqueue order
+    def route(table: StageTable, idx: int, rs: List[int],
+              t: float) -> None:
+        """Deliver requests to stage ``idx`` of their stream's table:
+        resolve cache-hit chains per request, then enqueue the remainder
+        on the stage's node."""
+        s = table.stream
+        if s.cache is None:            # no per-request divergence: bulk
+            st = table.stages[idx]
+            pend = st.node.pending
             for r in rs:
-                i: Optional[int] = idx
-                while i is not None:
-                    st = table.stages[i]
-                    if cache.get(st.key_prefix + (sigs[r],)) is not None:
-                        hits[r] += 1
-                        i = st.next_index
-                    else:
-                        break
-                if i is None:            # every remaining stage was cached
-                    finish_request(r, t)
-                    continue
+                pend.append((st, r))
+            st.queued += len(rs)
+            try_start(st.node, t)
+            return
+        touched = []                 # nodes to start, in enqueue order
+        for r in rs:
+            i: Optional[int] = idx
+            while i is not None:
                 st = table.stages[i]
-                st.node.pending.append((st, r))
-                if st.node not in touched:
-                    touched.append(st.node)
-            # start after the whole event is enqueued, not per request —
-            # otherwise the first request of a forwarded micro-batch starts
-            # solo on an idle node and the batch splits, paying the fixed
-            # overhead twice merely because a cache is attached
-            for node in touched:
-                try_start(node, t)
-
-        while heap and done < num_requests:
-            t, prio, _, payload = heapq.heappop(heap)
-            if t > clock.now_ms:
-                clock.now_ms = t
-
-            if prio == _P_SUBMIT:
-                r = payload
-                cols.submit_ms[r] = t
-                if arrivals is None:
-                    arrived += 1
-                    cols.arrival_ms[r] = t   # closed loop: arrival == submit
-                if repeat_rate > 0 and rng.random() < repeat_rate:
-                    sigs[r] = rng.choice(pattern_pool)
+                if s.cache.get(st.key_prefix + (s.sigs[r],)) is not None:
+                    s.hits[r] += 1
+                    i = st.next_index
                 else:
-                    sigs[r] = f"unique-{r}"
-                service[r] = SCHEDULING_OVERHEAD_MS
-                self._ensure_placement_alive("dispatch-failed")
-                table = self._current_table()
-                cols.stages[r] = len(table.stages)
-                heapq.heappush(heap, (t + SCHEDULING_OVERHEAD_MS, _P_ARRIVE,
-                                      next(seq), (table, 0, [r])))
+                    break
+            if i is None:            # every remaining stage was cached
+                finish_request(s, r, t)
+                continue
+            st = table.stages[i]
+            st.node.pending.append((st, r))
+            st.queued += 1
+            if st.node not in touched:
+                touched.append(st.node)
+        # start after the whole event is enqueued, not per request —
+        # otherwise the first request of a forwarded micro-batch starts
+        # solo on an idle node and the batch splits, paying the fixed
+        # overhead twice merely because a cache is attached
+        for node in touched:
+            try_start(node, t)
 
-            elif prio == _P_ARRIVAL:   # open loop: request enters the system
-                arrived += 1
-                if arrived < num_requests:   # chain the next arrival
-                    heapq.heappush(heap, (at_arr[arrived], _P_ARRIVAL,
-                                          next(seq), arrived))
-                if in_flight < concurrency:
-                    in_flight += 1
-                    heapq.heappush(heap, (t, _P_SUBMIT, next(seq), payload))
-                else:
-                    admit_q.append(payload)
+    while heap and done_total < total_n:
+        t, prio, _, payload = heapq.heappop(heap)
+        if t > clock.now_ms:
+            clock.now_ms = t
 
-            elif prio == _P_ARRIVE:
-                table, idx, rs = payload
-                route(table, idx, rs, t)
+        if prio == _P_SUBMIT:
+            s, r = payload
+            s.cols.submit_ms[r] = t
+            if s.arrivals is None:
+                s.arrived += 1
+                s.cols.arrival_ms[r] = t   # closed loop: arrival == submit
+            if s.repeat_rate > 0 and s.rng.random() < s.repeat_rate:
+                s.sigs[r] = s.rng.choice(s.pattern_pool)
+            else:
+                s.sigs[r] = f"unique-{r}"
+            s.service[r] = SCHEDULING_OVERHEAD_MS
+            s.engine._ensure_placement_alive("dispatch-failed")
+            table = s.engine._current_table()
+            table.stream = s
+            s.cols.stages[r] = len(table.stages)
+            heapq.heappush(heap, (t + SCHEDULING_OVERHEAD_MS, _P_ARRIVE,
+                                  next(seq), (table, 0, [r])))
 
-            elif prio == _P_CDONE:
-                node, st, batch, dur = payload
-                k = len(batch)
+        elif prio == _P_ARRIVAL:   # open loop: request enters the system
+            s, r = payload
+            s.arrived += 1
+            if s.arrived < s.n:        # chain the stream's next arrival
+                heapq.heappush(heap, (s.at_arr[s.arrived], _P_ARRIVAL,
+                                      next(seq), (s, s.arrived)))
+            if s.in_flight < s.concurrency:
+                s.in_flight += 1
+                heapq.heappush(heap, (t, _P_SUBMIT, next(seq), (s, r)))
+            else:
+                s.admit_q.append(r)
+
+        elif prio == _P_ARRIVE:
+            table, idx, rs = payload
+            route(table, idx, rs, t)
+
+        elif prio == _P_CDONE:
+            node, st, batch, dur = payload
+            s = st._table.stream
+            k = len(batch)
+            for r in batch:
+                s.service[r] += dur
+            if s.cache is not None:
                 for r in batch:
-                    service[r] += dur
-                if cache is not None:
-                    for r in batch:
-                        cache.put(st.key_prefix + (sigs[r],), st.cache_value,
-                                  transfer_bytes=st.out_bytes)
-                recv = st.recv_node
-                if recv is None:
-                    node.engine_busy = False
-                    for r in batch:
-                        finish_request(r, t)
-                    try_start(node, t)
-                else:
-                    ob = st.out_bytes * k
-                    tm = st.xfer_for(k)
-                    node.net_tx_bytes += ob
-                    recv.net_rx_bytes += ob
-                    total_net += ob
-                    tbl = st._table
-                    if fabric is not None:
-                        # shared fabric: the message becomes a flow on the
-                        # receiver's downlink; wire time (and the sender's
-                        # unblocking, in serial mode) resolves at delivery —
-                        # comm/service are charged then, with the actual
-                        # (possibly shared-bandwidth-stretched) elapsed time
-                        fpay = (tbl, st.next_index, batch,
-                                node if mode == "serial" else None)
-                        if mode == "overlap":
+                    s.cache.put(st.key_prefix + (s.sigs[r],), st.cache_value,
+                                transfer_bytes=st.out_bytes)
+            recv = st.recv_node
+            if recv is None:
+                node.engine_busy = False
+                for r in batch:
+                    finish_request(s, r, t)
+                try_start(node, t)
+            else:
+                ob = st.out_bytes * k
+                tm = st.xfer_for(k)
+                node.net_tx_bytes += ob
+                recv.net_rx_bytes += ob
+                s.total_net += ob
+                tbl = st._table
+                if fabric is not None:
+                    # shared fabric: the message becomes a flow on the
+                    # receiver's downlink (and, in maxmin mode, the
+                    # sender's uplink); wire time (and the sender's
+                    # unblocking, in serial mode) resolves at delivery —
+                    # comm/service are charged then, with the actual
+                    # (possibly shared-bandwidth-stretched) elapsed time
+                    fpay = (tbl, st.next_index, batch,
+                            node if mode == "serial" else None)
+                    if mode == "overlap":
+                        node.engine_busy = False
+                        if not fabric.shared_uplinks:
                             # the sender's tx FIFO still gates when a flow
                             # *starts* (solo duration as the occupancy
                             # estimate) — dropping it would let one node
                             # transmit several flows at full rate in
                             # parallel, making "shared" MORE optimistic
-                            # than the isolated charge it tightens
-                            node.engine_busy = False
+                            # than the isolated charge it tightens. In
+                            # maxmin mode the uplink itself arbitrates, so
+                            # flows start immediately.
                             sx = node.tx_free_ms
                             if t > sx:
                                 sx = t
@@ -743,137 +889,214 @@ class PipelineEngine:
                                            ("fs", recv, ob, tm, fpay)))
                                 try_start(node, t)
                                 continue
-                        elif mode != "serial":   # legacy: no sender resource
-                            node.engine_busy = False
-                        ver, nxt = fabric.start(
-                            recv.node_id, link_rate_bits_per_ms(recv.profile),
-                            ob * 8.0, tm, recv.profile.net_latency_ms,
-                            fpay, t)
-                        heapq.heappush(heap, (nxt, _P_XFER, next(seq),
-                                              ("bw", recv.node_id, ver)))
-                        if mode != "serial":
-                            try_start(node, t)
-                        continue
-                    for r in batch:
-                        comm[r] += tm
-                        service[r] += tm
-                    if mode == "overlap":
-                        # async tx link: node frees now, sends FIFO-queue
+                    elif mode != "serial":   # legacy: no sender resource
                         node.engine_busy = False
-                        sx = node.tx_free_ms
-                        if t > sx:
-                            sx = t
-                        node.tx_free_ms = sx + tm
-                        heapq.heappush(heap, (sx + tm, _P_ARRIVE, next(seq),
-                                              (tbl, st.next_index, batch)))
-                        try_start(node, t)
-                    elif mode == "serial":
-                        # synchronous send: the node is blocked until the
-                        # activation is delivered (the DEFER-less baseline)
-                        node.busy_until_ms = t + tm
-                        heapq.heappush(heap, (t + tm, _P_SDONE, next(seq),
-                                              node))
-                        heapq.heappush(heap, (t + tm, _P_ARRIVE, next(seq),
-                                              (tbl, st.next_index, batch)))
-                    else:                 # legacy: latency-only transfer
-                        node.engine_busy = False
-                        heapq.heappush(heap, (t + tm, _P_ARRIVE, next(seq),
-                                              (tbl, st.next_index, batch)))
-                        try_start(node, t)
-
-            elif prio == _P_XFER:        # shared-fabric link events
-                if payload[0] == "bw":   # a link's bandwidth completion
-                    _, link_id, ver = payload
-                    res = fabric.on_event(link_id, ver, t)
-                    if res is not None:  # None: membership changed since
-                        delivered, nxt = res
-                        for fpayload, at, elapsed in delivered:
-                            heapq.heappush(heap, (at, _P_XFER, next(seq),
-                                                  ("dl", fpayload, elapsed)))
-                        if nxt is not None:
-                            heapq.heappush(heap, (nxt[1], _P_XFER, next(seq),
-                                                  ("bw", link_id, nxt[0])))
-                elif payload[0] == "fs":  # deferred flow start (tx freed)
-                    _, recv, ob, tm, fpay = payload
                     ver, nxt = fabric.start(
                         recv.node_id, link_rate_bits_per_ms(recv.profile),
-                        ob * 8.0, tm, recv.profile.net_latency_ms, fpay, t)
+                        ob * 8.0, tm, recv.profile.net_latency_ms,
+                        fpay, t, sender_id=node.node_id,
+                        sender_rate=link_rate_bits_per_ms(node.profile))
                     heapq.heappush(heap, (nxt, _P_XFER, next(seq),
                                           ("bw", recv.node_id, ver)))
-                else:                    # "dl": activation delivery
-                    _, (tbl, idx, batch, blocked), elapsed = payload
-                    for r in batch:
-                        comm[r] += elapsed
-                        service[r] += elapsed
-                    if blocked is not None:   # serial: unblock the sender
-                        blocked.busy_until_ms = t
-                        blocked.engine_busy = False
-                        try_start(blocked, t)
-                    route(tbl, idx, batch, t)
+                    if mode != "serial":
+                        try_start(node, t)
+                    continue
+                for r in batch:
+                    s.comm[r] += tm
+                    s.service[r] += tm
+                if mode == "overlap":
+                    # async tx link: node frees now, sends FIFO-queue
+                    node.engine_busy = False
+                    sx = node.tx_free_ms
+                    if t > sx:
+                        sx = t
+                    node.tx_free_ms = sx + tm
+                    heapq.heappush(heap, (sx + tm, _P_ARRIVE, next(seq),
+                                          (tbl, st.next_index, batch)))
+                    try_start(node, t)
+                elif mode == "serial":
+                    # synchronous send: the node is blocked until the
+                    # activation is delivered (the DEFER-less baseline)
+                    node.busy_until_ms = t + tm
+                    heapq.heappush(heap, (t + tm, _P_SDONE, next(seq),
+                                          node))
+                    heapq.heappush(heap, (t + tm, _P_ARRIVE, next(seq),
+                                          (tbl, st.next_index, batch)))
+                else:                 # legacy: latency-only transfer
+                    node.engine_busy = False
+                    heapq.heappush(heap, (t + tm, _P_ARRIVE, next(seq),
+                                          (tbl, st.next_index, batch)))
+                    try_start(node, t)
 
-            elif prio == _P_SDONE:
-                node = payload
-                node.engine_busy = False
-                try_start(node, t)
+        elif prio == _P_XFER:        # shared-fabric link events
+            if payload[0] == "bw":   # a link's bandwidth completion
+                _, link_id, ver = payload
+                res = fabric.on_event(link_id, ver, t)
+                if res is not None:  # None: membership changed since
+                    delivered, nxt = res
+                    for fpayload, at, elapsed in delivered:
+                        heapq.heappush(heap, (at, _P_XFER, next(seq),
+                                              ("dl", fpayload, elapsed)))
+                    if nxt is not None:
+                        heapq.heappush(heap, (nxt[1], _P_XFER, next(seq),
+                                              ("bw", link_id, nxt[0])))
+            elif payload[0] == "fs":  # deferred flow start (tx freed)
+                _, recv, ob, tm, fpay = payload
+                ver, nxt = fabric.start(
+                    recv.node_id, link_rate_bits_per_ms(recv.profile),
+                    ob * 8.0, tm, recv.profile.net_latency_ms, fpay, t)
+                heapq.heappush(heap, (nxt, _P_XFER, next(seq),
+                                      ("bw", recv.node_id, ver)))
+            else:                    # "dl": activation delivery
+                _, (tbl, idx, batch, blocked), elapsed = payload
+                s = tbl.stream
+                for r in batch:
+                    s.comm[r] += elapsed
+                    s.service[r] += elapsed
+                if blocked is not None:   # serial: unblock the sender
+                    blocked.busy_until_ms = t
+                    blocked.engine_busy = False
+                    try_start(blocked, t)
+                route(tbl, idx, batch, t)
 
-            elif prio == _P_POLL:
-                if t - monitor.last_poll_ms >= POLL_INTERVAL_MS:
-                    stats = monitor.online_stats()
-                    scheduler.select_node(stats)
-                    self._flush_sched()
-                qd_t.append(t)
-                qd_n.append(arrived - done)   # in system, admission q incl.
-                if arrivals is not None and controller is not None:
+        elif prio == _P_SDONE:
+            node = payload
+            node.engine_busy = False
+            try_start(node, t)
+
+        elif prio == _P_POLL:
+            for s in streams:
+                if t - s.monitor.last_poll_ms >= POLL_INTERVAL_MS:
+                    stats = s.monitor.online_stats()
+                    s.scheduler.select_node(stats)   # admission refresh
+                    s.engine._flush_sched()
+                s.qd_t.append(t)
+                s.qd_n.append(s.arrived - s.done)  # in system, admit q incl.
+                if s.arrivals is not None and s.controller is not None:
                     # arrival-rate vs completion-rate over the poll window:
                     # the open-loop overload signal (closed-loop streams
                     # can't overload — submission backs off by construction)
-                    window = t - last_rate_t
+                    window = t - s.last_rate_t
                     if window > 0:
-                        controller.observe_rates(
-                            1000.0 * (arrived - last_arr) / window,
-                            1000.0 * (done - last_done) / window)
-                        last_rate_t, last_arr, last_done = t, arrived, done
-                if controller is not None:
-                    controller.on_engine_event("poll")
-                # re-chain the poll only while some progress-capable event
-                # remains (the heap is O(window)-small, so the scan is
-                # cheap). Without this check the self-rechaining poll keeps
-                # the heap non-empty forever and a stranded request would
-                # spin the loop instead of reaching the conservation error
-                # below.
-                if any(pr not in (_P_POLL, _P_SCENARIO)
-                       for _, pr, _, _ in heap):
-                    heapq.heappush(heap, (t + POLL_INTERVAL_MS, _P_POLL,
-                                          next(seq), None))
+                        s.controller.observe_rates(
+                            1000.0 * (s.arrived - s.last_arr) / window,
+                            1000.0 * (s.done - s.last_done) / window)
+                        s.last_rate_t, s.last_arr, s.last_done = (
+                            t, s.arrived, s.done)
+            if multi:
+                # refresh each tenant's view of the node-time budgets the
+                # other tenants' plans hold right now, so re-planning is
+                # tenancy-aware whether or not an arbiter is attached
+                for s in streams:
+                    if s.controller is not None:
+                        s.pipe.committed_ms = _committed_excluding(
+                            streams, s)
+            if arbiter is not None:
+                arbiter.on_engine_event("poll")
+            else:
+                for s in streams:
+                    if s.controller is not None:
+                        s.controller.on_engine_event("poll")
+            # re-chain the poll only while some progress-capable event
+            # remains (the heap is O(window)-small, so the scan is
+            # cheap). Without this check the self-rechaining poll keeps
+            # the heap non-empty forever and a stranded request would
+            # spin the loop instead of reaching the conservation error
+            # below.
+            if any(pr not in (_P_POLL, _P_SCENARIO)
+                   for _, pr, _, _ in heap):
+                heapq.heappush(heap, (t + POLL_INTERVAL_MS, _P_POLL,
+                                      next(seq), None))
 
-            else:                          # _P_SCENARIO
-                apply_scenario_event(cluster, payload)
-                if not self._placement_alive():
-                    if controller is not None:
-                        controller.on_engine_event("scenario",
-                                                   force_poll=True)
-                    else:
-                        p._repair_placement()
-                    # no loud failure here: in-flight work may drain and a
-                    # later submit (or recovery event) retries via
-                    # _ensure_placement_alive before routing new requests
+        else:                          # _P_SCENARIO
+            apply_scenario_event(cluster, payload)
+            dead = [s for s in streams
+                    if not s.engine._placement_alive()]
+            for s in dead:
+                if s.controller is None:
+                    s.pipe._repair_placement()
+            if dead:
+                if arbiter is not None:
+                    arbiter.on_engine_event("scenario", force_poll=True)
+                else:
+                    for s in dead:
+                        if s.controller is not None:
+                            s.controller.on_engine_event("scenario",
+                                                         force_poll=True)
+                # no loud failure here: in-flight work may drain and a
+                # later submit (or recovery event) retries via
+                # _ensure_placement_alive before routing new requests
 
-        # conservation: every request that arrived must have completed (the
-        # engine drains in-flight and admission-queued work before exiting)
-        if done < num_requests:
+    # conservation: every request that arrived must have completed (the
+    # engine drains in-flight and admission-queued work before exiting)
+    for s in streams:
+        if s.done < s.n:
             raise RuntimeError(
-                f"engine drained its event heap with {done}/{num_requests} "
-                f"completions — {arrived - done} request(s) lost in flight")
+                f"engine drained its event heap with {s.done}/{s.n} "
+                f"completions for stream {s.name!r} — "
+                f"{s.arrived - s.done} request(s) lost in flight")
 
-        # scenario events past the stream's end still take effect
-        leftover = sorted((pl for _, pr, _, pl in heap if pr == _P_SCENARIO),
-                          key=lambda e: e.at_ms)
-        cols.comm_ms[:] = comm
-        cols.service_ms[:] = service
-        cols.cache_hits[:] = hits
-        return self._report(
-            name, cols, total_net, num_requests, leftover,
-            queue_depth=(np.asarray(qd_t, dtype=np.float64),
-                         np.asarray(qd_n, dtype=np.int64)),
-            fabric_stats=fabric.stats() if fabric is not None else None,
-            batch_hist=dict(sorted(bhist.items())))
+    # scenario events past the stream's end still take effect
+    leftover = sorted((pl for _, pr, _, pl in heap if pr == _P_SCENARIO),
+                      key=lambda e: e.at_ms)
+    for s in streams:
+        s.cols.comm_ms[:] = s.comm
+        s.cols.service_ms[:] = s.service
+        s.cols.cache_hits[:] = s.hits
+    return leftover, fabric
+
+
+class MultiTenantEngine:
+    """N tenants' streams through one shared event heap.
+
+    Requests interleave on shared per-node FIFO queues and the shared
+    fabric while each tenant keeps its own plan, stage tables, cache,
+    RNG, and admission window. The loop body is the very code a
+    single-tenant event run executes (:func:`_run_event_streams`), so
+    the 1-tenant case is bit-for-bit today's engine; the user-facing
+    entry point is ``core.tenancy.TenantRegistry.run``."""
+
+    def __init__(self, cluster, tenants: Sequence):
+        self.cluster = cluster
+        self.tenants = list(tenants)
+        assert self.tenants, "no tenants to run"
+
+    def run(self, scenario: Optional[Sequence[ScenarioEvent]] = None,
+            config: Optional[EngineConfig] = None, arbiter=None,
+            name: str = "tenants") -> Dict[str, RunReport]:
+        """Serve every tenant's stream (its ``TenantTraffic``) to
+        completion under one shared ``config`` (the cluster-wide resource
+        model: transfer/fabric/micro-batch policy); returns
+        {tenant name: RunReport}. With ``arbiter`` set, adaptation runs
+        through cross-tenant arbitration (one best-net-gain migration per
+        control tick) instead of independent per-tenant controllers."""
+        cfg = config or EngineConfig()
+        streams = []
+        for t in self.tenants:
+            p = t.pipeline
+            if p._engine is None:
+                p._engine = PipelineEngine(p)
+            tr = t.traffic
+            streams.append(_Stream(p._engine, tr.num_requests,
+                                   f"{name}/{t.name}", tr.repeat_rate,
+                                   tr.seed, tr.concurrency, tr.arrivals))
+        leftover, fabric = _run_event_streams(self.cluster, streams, cfg,
+                                              scenario, arbiter=arbiter)
+        clock = self.cluster.clock
+        clock.now_ms = max([clock.now_ms]
+                           + [float(s.cols.finish_ms.max())
+                              for s in streams])
+        for ev in leftover:
+            apply_scenario_event(self.cluster, ev)
+        fstats = fabric.stats() if fabric is not None else None
+        return {t.name: s.engine._stream_report(
+                    s.name, s.cols, s.total_net,
+                    queue_depth=(np.asarray(s.qd_t, dtype=np.float64),
+                                 np.asarray(s.qd_n, dtype=np.int64)),
+                    # per-report copy: the fabric is shared, its stats
+                    # dict must not be (mutating one tenant's report
+                    # would silently edit every other's)
+                    fabric_stats=dict(fstats) if fstats is not None
+                    else None,
+                    batch_hist=dict(sorted(s.bhist.items())))
+                for t, s in zip(self.tenants, streams)}

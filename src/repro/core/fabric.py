@@ -32,11 +32,26 @@ Mechanics (driven by ``core.engine``'s heap — the fabric never owns time):
 The latency tail is propagation, not occupancy: a flow stops consuming
 bandwidth at its bandwidth-completion event, so flows starting during
 another flow's latency tail do not share with it.
+
+**Per-sender uplinks** (``FairShareFabric(shared_uplinks=True)``, the
+engine's ``fabric="maxmin"`` mode): each flow is constrained by *two*
+links — its sender's uplink and its receiver's downlink — and rates are
+allocated by global **max-min fairness** (progressive filling,
+:func:`maxmin_rates`): repeatedly saturate the most-contended link,
+freeze its flows at the fair share, subtract, and continue. A node
+fanning out to many receivers is now uplink-bound (the hub-and-spoke
+regime the receiver-only model misses). The isolated-charge fast path is
+kept for exactly the flows it still describes: any flow whose allocated
+rate equals its receiver's downlink capacity (never constrained by
+sharing *or* by a slower sender uplink) is delivered via the same cached
+``transfer_ms`` as isolated accounting, bit-for-bit; every other flow —
+including a solo flow behind a slow uplink — uses fluid accounting, so
+delivery times stay monotone with the events that release them.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 #: slack (ms) under which a flow's completion estimate counts as reached at
 #: an event timestamp — absorbs the float non-associativity of advancing
@@ -44,24 +59,63 @@ from typing import Dict, List, Optional, Tuple
 _COMPLETION_SLACK_MS = 1e-9
 
 
+def maxmin_rates(flow_links: Sequence[Sequence[str]],
+                 capacities: Dict[str, float]) -> List[float]:
+    """Max-min fair rate allocation by progressive filling.
+
+    ``flow_links[i]`` lists the link ids constraining flow i (its sender
+    uplink and receiver downlink); ``capacities`` maps link id to drain
+    rate. Repeatedly find the most-contended link (smallest
+    capacity / active-flow count), freeze its flows at that fair share,
+    subtract their rates from every link they traverse, and continue
+    until every flow is frozen. Ties break on link id, so the allocation
+    is deterministic. The classic max-min property holds: every flow is
+    bottlenecked at some saturated link on which no other flow gets a
+    higher rate (property-tested in ``tests/test_traffic.py``).
+    """
+    n = len(flow_links)
+    rates = [0.0] * n
+    active = set(range(n))
+    caps = dict(capacities)
+    while active:
+        members: Dict[str, List[int]] = {}
+        for i in active:
+            for link in flow_links[i]:
+                members.setdefault(link, []).append(i)
+        share, bott = min((caps[link] / len(ms), link)
+                          for link, ms in members.items())
+        share = max(share, 0.0)
+        for i in members[bott]:
+            rates[i] = share
+            active.discard(i)
+            for link in flow_links[i]:
+                caps[link] = max(caps[link] - share, 0.0)
+    return rates
+
+
 class Flow:
     """One boundary transfer in flight on a shared link: remaining payload
     bits, the engine payload to deliver, and the bookkeeping that decides
     whether the flow kept the isolated-accounting fast path (undisturbed)
-    or fell to fluid fair-share accounting."""
+    or fell to fluid fair-share accounting. In max-min mode the flow also
+    carries its constraining link ids and current allocated rate."""
 
     __slots__ = ("bits_left", "payload", "start_ms", "solo_ms", "latency_ms",
-                 "disturbed", "bw_done_est")
+                 "disturbed", "bw_done_est", "links", "rate", "rx_cap")
 
     def __init__(self, bits: float, payload, start_ms: float, solo_ms: float,
-                 latency_ms: float):
+                 latency_ms: float, links: Tuple[str, ...] = (),
+                 rx_cap: float = 0.0):
         self.bits_left = bits
         self.payload = payload
         self.start_ms = start_ms
         self.solo_ms = solo_ms          # isolated-accounting transfer_ms
         self.latency_ms = latency_ms
-        self.disturbed = False          # ever shared its link?
+        self.disturbed = False          # ever left the isolated-charge path?
         self.bw_done_est = 0.0          # bandwidth-completion estimate
+        self.links = links              # max-min mode: constraining links
+        self.rate = 0.0                 # max-min mode: allocated rate
+        self.rx_cap = rx_cap            # max-min mode: receiver downlink cap
 
     def deliver_at(self, bw_done: float) -> float:
         """Delivery timestamp for a flow whose bandwidth phase completed at
@@ -130,21 +184,129 @@ class FairShareFabric:
     bandwidth-completion event fires; both return ``(version, next_ms)``
     describing the link's next event so the engine can keep exactly one
     live heap entry per link.
+
+    ``shared_uplinks=True`` switches to the **max-min** fluid model: every
+    flow is constrained by both its sender's uplink and its receiver's
+    downlink, rates are reallocated globally (:func:`maxmin_rates`) on
+    each membership change, and one global version stamp replaces the
+    per-link stamps (``on_event`` then ignores its ``link_id``). The
+    solo-flow bit-parity guarantee is preserved in both modes.
     """
 
-    def __init__(self):
+    def __init__(self, shared_uplinks: bool = False):
         self._links: Dict[str, _Link] = {}
+        self.shared_uplinks = shared_uplinks
         self.flows_started = 0
         self.flows_shared = 0           # flows that ever split their link
+        # max-min mode state: one global flow set and version stamp
+        self._flows: List[Flow] = []
+        self._caps: Dict[str, float] = {}
+        self._version = 0
+        self._last_ms = 0.0
+        self._peak = 0                  # max flows sharing any one link
+
+    # --- max-min (dual-endpoint) mode ----------------------------------------
+
+    def _advance_all(self, now: float) -> None:
+        """Serve elapsed progress to every active flow at its current
+        max-min rate (global counterpart of ``_Link.advance``)."""
+        dt = now - self._last_ms
+        if dt > 0:
+            for f in self._flows:
+                f.bits_left -= dt * f.rate
+        self._last_ms = now
+
+    def _reallocate(self) -> Optional[float]:
+        """Recompute global max-min rates and every flow's completion
+        estimate; returns the earliest estimate (the fabric's next heap
+        event) or None when idle.
+
+        A flow is marked *disturbed* — leaving the isolated-accounting
+        fast path — the moment its allocated rate drops below its
+        receiver's downlink capacity, whether from sharing a link or from
+        a slower sender uplink. This is the precise condition under which
+        the isolated charge (receiver-based ``transfer_ms``) stops
+        describing the flow: a flow that shares its sender's uplink but
+        still receives its full downlink rate legitimately keeps isolated
+        accounting, while a *solo* flow behind a slow uplink must fall to
+        fluid accounting (delivery at bandwidth completion + latency) or
+        its delivery would be stamped before the event that releases it
+        and its sojourn would omit the uplink wait entirely."""
+        if not self._flows:
+            return None
+        rates = maxmin_rates([f.links for f in self._flows], self._caps)
+        members: Dict[str, int] = {}
+        for f in self._flows:
+            for link in f.links:
+                members[link] = members.get(link, 0) + 1
+        for link, cnt in members.items():
+            self._peak = max(self._peak, cnt)
+        nxt = None
+        for f, rate in zip(self._flows, rates):
+            f.rate = rate
+            if not f.disturbed and rate < f.rx_cap * (1.0 - 1e-12):
+                f.disturbed = True
+                self.flows_shared += 1
+            f.bw_done_est = (self._last_ms + max(f.bits_left, 0.0) / rate
+                             if rate > 0 else float("inf"))
+            if nxt is None or f.bw_done_est < nxt:
+                nxt = f.bw_done_est
+        return nxt
+
+    def _start_maxmin(self, link_id, rate_bits_per_ms, bits, solo_ms,
+                      latency_ms, payload, now, sender_id, sender_rate):
+        """:meth:`start` in max-min mode: register the flow on both its
+        endpoint links and reallocate globally."""
+        self._advance_all(now)
+        links = ["rx:" + link_id]
+        self._caps["rx:" + link_id] = rate_bits_per_ms
+        if sender_id is not None:
+            links.append("tx:" + sender_id)
+            self._caps["tx:" + sender_id] = (sender_rate
+                                             if sender_rate is not None
+                                             else rate_bits_per_ms)
+        self._flows.append(Flow(bits, payload, now, solo_ms, latency_ms,
+                                links=tuple(links),
+                                rx_cap=rate_bits_per_ms))
+        self.flows_started += 1
+        self._version += 1
+        return self._version, self._reallocate()
+
+    def _on_event_maxmin(self, version: int, now: float):
+        """:meth:`on_event` in max-min mode (global version stamp)."""
+        if version != self._version:
+            return None
+        self._advance_all(now)
+        done = [f for f in self._flows
+                if f.bw_done_est <= now + _COMPLETION_SLACK_MS]
+        self._flows = [f for f in self._flows
+                       if f.bw_done_est > now + _COMPLETION_SLACK_MS]
+        delivered = []
+        for f in done:
+            at = f.deliver_at(now)
+            delivered.append((f.payload, at, f.elapsed_ms(at)))
+        self._version += 1
+        nxt_t = self._reallocate()
+        return delivered, ((self._version, nxt_t)
+                           if nxt_t is not None else None)
+
+    # --- shared entry points --------------------------------------------------
 
     def start(self, link_id: str, rate_bits_per_ms: float, bits: float,
               solo_ms: float, latency_ms: float, payload,
-              now: float) -> Tuple[int, float]:
+              now: float, sender_id: Optional[str] = None,
+              sender_rate: Optional[float] = None) -> Tuple[int, float]:
         """Begin a transfer of ``bits`` on ``link_id`` at ``now``; returns
         the link's bumped version and its next bandwidth-completion time.
         ``solo_ms`` is the isolated-accounting ``transfer_ms`` for this
         payload (the undisturbed delivery time); ``payload`` is returned
-        verbatim at delivery."""
+        verbatim at delivery. ``sender_id``/``sender_rate`` identify the
+        sending node's uplink — used only in max-min mode; the
+        receiver-downlink mode ignores them."""
+        if self.shared_uplinks:
+            return self._start_maxmin(link_id, rate_bits_per_ms, bits,
+                                      solo_ms, latency_ms, payload, now,
+                                      sender_id, sender_rate)
         link = self._links.get(link_id)
         if link is None:
             link = self._links[link_id] = _Link(rate_bits_per_ms)
@@ -176,7 +338,10 @@ class FairShareFabric:
         it was scheduled), else ``(delivered, nxt)`` where ``delivered`` is
         a list of ``(payload, deliver_at_ms, elapsed_ms)`` for every flow
         whose bandwidth phase is done, and ``nxt`` is ``(version, t)`` for
-        the link's next event or None when it went idle."""
+        the link's next event or None when it went idle. In max-min mode
+        ``link_id`` is ignored (the version stamp is global)."""
+        if self.shared_uplinks:
+            return self._on_event_maxmin(version, now)
         link = self._links[link_id]
         if version != link.version:
             return None
@@ -197,6 +362,13 @@ class FairShareFabric:
         """Run-level fabric telemetry: link count, flow counts, and the
         peak concurrency observed per link (the contention the isolated
         accounting ignores) — surfaced as ``RunReport.fabric_stats``."""
+        if self.shared_uplinks:
+            return dict(
+                links=len(self._caps),
+                flows=self.flows_started,
+                shared_flows=self.flows_shared,
+                peak_concurrent=self._peak,
+            )
         return dict(
             links=len(self._links),
             flows=self.flows_started,

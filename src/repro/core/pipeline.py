@@ -41,6 +41,7 @@ from repro.core.partitioner import ModelPartitioner, PartitionPlan
 from repro.core.planner import (PartitionPlanner, PlannerConfig,
                                 node_views_from_cluster)
 from repro.core.scheduler import SCHEDULING_OVERHEAD_MS, TaskScheduler
+from repro.core.tenancy import Tenant
 
 
 @dataclass
@@ -325,15 +326,24 @@ class DistributedInference:
                  assignment: Optional[List[str]] = None,
                  batch: int = 1, adaptive: bool = False,
                  adaptation: Optional[AdaptationConfig] = None,
-                 planner: Optional[PlannerConfig] = None):
+                 planner: Optional[PlannerConfig] = None,
+                 tenant: Optional[Tenant] = None,
+                 committed_ms: Optional[Dict[str, float]] = None):
         self.cluster = cluster
         self.partitioner = partitioner
+        # plan/placement ownership lives on the tenant (core.tenancy): a
+        # solo pipeline gets an anonymous tenant, a registry-managed one
+        # is handed the registry's Tenant object
+        self.tenant = tenant if tenant is not None else Tenant("default")
+        self.tenant.pipeline = self
         self.monitor = ResourceMonitor(cluster)
         self.scheduler = TaskScheduler()
-        self.deployer = ModelDeployer(cluster, self.monitor, self.scheduler, opt_level)
+        self.deployer = ModelDeployer(cluster, self.monitor, self.scheduler,
+                                      opt_level, tenant=self.tenant.name)
         self.cache = ResultCache() if use_cache else None
         self.executor = executor
         self.batch = batch
+        self.committed_ms = committed_ms   # other tenants' node time budgets
         self._engine = None
         if planner is None:
             self.planner_cfg = PlannerConfig(max_stages=num_partitions)
@@ -346,13 +356,17 @@ class DistributedInference:
         if method == "planner":
             # joint boundaries + assignment from the DP planner; the same
             # config drives rebalance() and (unless an AdaptationConfig
-            # overrides it) the AdaptationController's re-planning
+            # overrides it) the AdaptationController's re-planning. With
+            # committed_ms (a TenantRegistry deploy) the search plans
+            # around the node time budgets earlier tenants already hold.
             assert assignment is None, \
                 "method='planner' chooses the assignment; don't pass one"
             res = PartitionPlanner(partitioner.graph, self.planner_cfg).plan(
                 node_views_from_cluster(cluster, self.scheduler),
                 batch=batch, calibration=partitioner.calibration,
-                speedup=self.deployer.speedup)
+                speedup=self.deployer.speedup,
+                committed_ms=self.committed_ms,
+                weight=self.tenant.traffic.weight)
             if res is None:
                 raise RuntimeError("planner found no node with capacity")
             self.plan = partitioner.plan_from_cuts(res.cuts)
@@ -368,6 +382,29 @@ class DistributedInference:
             AdaptationController(self, adaptation) if adaptation is not None
             else None)
         self._verified = executor is None
+
+    # --- tenancy: plan ownership delegates to the Tenant ----------------------
+
+    @property
+    def plan(self):
+        """The partition plan currently served — owned by the tenancy
+        layer (``self.tenant``), so registries and arbiters see the same
+        state this pipeline routes by."""
+        return self.tenant.plan
+
+    @plan.setter
+    def plan(self, value):
+        self.tenant.plan = value
+
+    @property
+    def placement(self) -> Dict[int, str]:
+        """The stage->node placement currently served — tenant-owned,
+        like :attr:`plan`."""
+        return self.tenant.placement
+
+    @placement.setter
+    def placement(self, value: Dict[int, str]):
+        self.tenant.placement = value
 
     # --- real-numerics verification -----------------------------------------
 
@@ -430,7 +467,9 @@ class DistributedInference:
                                    self.planner_cfg).plan(
                 node_views_from_cluster(self.cluster, self.scheduler),
                 batch=self.batch, calibration=self.partitioner.calibration,
-                speedup=self.deployer.speedup)
+                speedup=self.deployer.speedup,
+                committed_ms=self.committed_ms,
+                weight=self.tenant.traffic.weight)
             if res is None:
                 raise RuntimeError("planner found no node with capacity")
             plan, assignment = self.partitioner.plan_from_cuts(res.cuts), \
@@ -572,7 +611,8 @@ class DistributedInference:
                     part.cost * self.batch / self.deployer.speedup,
                     node.profile, ws)
                 self.scheduler.task_completed(node.node_id, rec.exec_ms,
-                                              predicted_ms=pred)
+                                              predicted_ms=pred,
+                                              tenant=self.tenant.name)
                 service += rec.exec_ms
                 t = rec.end_ms
                 if part.index < len(plan.partitions) - 1:

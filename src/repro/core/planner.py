@@ -36,12 +36,26 @@ assignment swaps. ``mode="exhaustive"`` runs the same recurrence over *all*
 node orders — exact, feasible only for n <= ~5, and kept as the parity
 oracle for the tests.
 
-**Beam fallback.** The DP gives each node at most one contiguous stage.
-When one node is far faster than the rest it can pay to give it several
-*non-contiguous* stages (e.g. both heavy ends of the model);
-``mode="beam"`` runs a width-bounded left-to-right search over (cut here?,
-which node next?) decisions that allows node reuse — the non-contiguous
-fallback, at heuristic (not exact) quality.
+**Non-contiguous placement.** The DP gives each node at most one
+contiguous stage. When one node is far faster than the rest it can pay to
+give it several *non-contiguous* stages (e.g. both heavy ends of the
+model). ``mode="assign"`` solves this as min-max (stage, node) assignment
+— balanced cut candidates, longest-processing-time-first list scheduling
+onto per-node stage times, single-stage-move polish — seeded with the DP's
+contiguous optimum, so it never returns a worse plan than the DP. It
+replaces the older ``mode="beam"`` width-bounded search (kept as a
+comparison oracle) as the non-contiguous fallback.
+
+**Tenancy.** Every search accepts per-node *committed time budgets*
+(``committed_ms`` — ms/request already charged to a node by other
+tenants' resident stages) and a tenant traffic ``weight``: a node's
+bottleneck contribution is its committed load plus its new stages, so
+plans route around co-resident models. :func:`plan_tenants` iterates the
+per-tenant search Gauss-Seidel style into a joint multi-tenant plan, and
+:meth:`PartitionPlanner.plan_partial` solves the bounded-migration
+variant — keep the cuts, move at most k stages — whose transfer cost is
+only the moved stages' parameters (the Adaptation Controller's cheap
+candidate).
 """
 
 from __future__ import annotations
@@ -114,7 +128,9 @@ class PlannerConfig:
     """Search knobs for :class:`PartitionPlanner`.
 
     ``mode``: ``auto`` (exhaustive when n <= ``exhaustive_max_nodes``, DP
-    otherwise), ``dp``, ``beam``, or ``exhaustive``.
+    otherwise), ``dp``, ``assign`` (non-contiguous min-max assignment,
+    DP-seeded), ``beam`` (legacy non-contiguous search), or
+    ``exhaustive``.
     """
     mode: str = "auto"
     exhaustive_max_nodes: int = 5     # n! orders stays tractable up to here
@@ -128,7 +144,9 @@ class PlannerConfig:
 class PlanResult:
     """A solved joint plan: cut list, per-stage node ids, and the predicted
     bottleneck under the planner's objective. ``mode`` records which search
-    produced it; ``dp_runs`` counts (order, DP) solves spent."""
+    produced it; ``dp_runs`` counts (order, DP) solves spent;
+    ``moved_stages`` (partial mode) counts stage re-assignments vs. the
+    plan the search started from."""
     cuts: List[int]
     assignment: List[str]
     bottleneck_ms: float
@@ -136,6 +154,7 @@ class PlanResult:
     dp_runs: int = 0
     elapsed_ms: float = 0.0
     node_idx: List[int] = field(default_factory=list)   # internal indices
+    moved_stages: int = 0
 
     @property
     def stages(self) -> int:
@@ -308,7 +327,9 @@ class PartitionPlanner:
 
     def plan(self, views: Sequence[NodeView], batch: int = 1,
              calibration: float = 1.0, speedup: float = 1.0,
-             mode: Optional[str] = None) -> Optional[PlanResult]:
+             mode: Optional[str] = None,
+             committed_ms: Optional[Dict[str, float]] = None,
+             weight: float = 1.0) -> Optional[PlanResult]:
         """Solve (cuts, assignment) for the given live nodes.
 
         Args:
@@ -316,6 +337,13 @@ class PartitionPlanner:
             batch / calibration / speedup: cost scaling, matching how the
                 pipeline charges stage execution.
             mode: override the configured search mode for this call.
+            committed_ms: per-node time budget (ms/request) already held
+                by other tenants' stages — added to each node's bottleneck
+                contribution, so the search routes around co-resident
+                models. Nodes absent from the map are uncommitted.
+            weight: this tenant's relative traffic weight; scales its own
+                stage times so tenants of different offered load compare
+                in the same utilization units.
         Returns:
             ``PlanResult`` with node ids filled in, or None when no node has
             capacity.
@@ -330,10 +358,10 @@ class PartitionPlanner:
                     if len(views) <= self.cfg.exhaustive_max_nodes else "dp")
         n = len(views)
         # one contiguous stage per node bounds dp/exhaustive at n stages;
-        # the beam may reuse nodes, so it is only capped when configured
-        default_max = self._L if mode == "beam" else n
+        # assign/beam may reuse nodes, so they are only capped by config
+        default_max = self._L if mode in ("beam", "assign") else n
         max_stages = min(self._L, self.cfg.max_stages or default_max)
-        if mode != "beam":
+        if mode not in ("beam", "assign"):
             # clamp a configured max_stages to the LIVE node count: after a
             # death, fewer nodes than the deploy-time stage count must yield
             # a shallower plan, not an empty permutation search (-> None,
@@ -341,22 +369,52 @@ class PartitionPlanner:
             max_stages = min(max_stages, n)
         scale = calibration * batch / speedup
         tmats = [self._time_matrix(v, batch, scale) for v in views]
+        if weight != 1.0:
+            tmats = [m * weight for m in tmats]
         caps = [v.capability for v in views]
+        committed, floor = self._committed_vector(views, committed_ms)
 
         if mode == "beam":
-            res = self._beam(tmats, n, max_stages)
+            res = self._beam(tmats, n, max_stages, committed)
+        elif mode == "assign":
+            res = self._assign(tmats, caps, max_stages, committed)
         elif mode == "exhaustive":
             res = self._search_orders(
-                itertools.permutations(range(n), max_stages), tmats, mode)
+                itertools.permutations(range(n), max_stages),
+                self._with_committed(tmats, committed), mode)
         elif mode == "dp":
-            res = self._dp_candidates(tmats, caps, max_stages)
+            res = self._dp_candidates(self._with_committed(tmats, committed),
+                                      caps, max_stages)
         else:
             raise ValueError(f"unknown planner mode: {mode}")
         if res is None:
             return None
+        res.bottleneck_ms = max(res.bottleneck_ms, floor)
         res.assignment = [views[j].node_id for j in res.node_idx]
         res.elapsed_ms = (time.perf_counter() - t_start) * 1e3
         return res
+
+    @staticmethod
+    def _committed_vector(views, committed_ms):
+        """Per-view committed-load array plus its max (the bottleneck
+        floor a plan can never beat: a fully-committed node stays loaded
+        whether or not this tenant lands stages on it)."""
+        if not committed_ms:
+            return None, 0.0
+        committed = np.array([float(committed_ms.get(v.node_id, 0.0))
+                              for v in views])
+        return committed, float(committed.max())
+
+    @staticmethod
+    def _with_committed(tmats, committed):
+        """Fold per-node committed load into the stage-time matrices —
+        exact for the one-stage-per-node DP/exhaustive searches (a node's
+        total is its committed load plus its single stage). The
+        node-reuse searches (assign/beam) keep committed separate, as a
+        per-node load initializer, to avoid charging it once per stage."""
+        if committed is None:
+            return tmats
+        return [m + c for m, c in zip(tmats, committed)]
 
     # --- search drivers ------------------------------------------------------
 
@@ -441,17 +499,206 @@ class PartitionPlanner:
                 break
         return best
 
-    # --- beam fallback (non-contiguous placements) ---------------------------
+    # --- non-contiguous placements -------------------------------------------
 
-    def _beam(self, tmats, n: int, max_stages: int) -> Optional[PlanResult]:
+    def _assign(self, tmats, caps, max_stages,
+                committed=None) -> Optional[PlanResult]:
+        """Min-max (stage, node) assignment with node reuse — the
+        non-contiguous search that replaced the beam fallback.
+
+        Candidate cut lists (the DP's contiguous optimum plus a balanced
+        cut list per stage count) are assigned to nodes by
+        longest-processing-time-first list scheduling over the per-node
+        stage times — each node's load starts at its committed (other-
+        tenant) budget — then polished by single-stage moves off the
+        bottleneck node. Seeded with the DP result, so it never returns a
+        plan worse than the contiguous optimum it generalizes."""
+        n = len(caps)
+        base = self._dp_candidates(self._with_committed(tmats, committed),
+                                   caps, min(n, max_stages))
+        best = base
+        cut_cands = [base.cuts] if base is not None else []
+        for m in range(1, max_stages + 1):
+            cuts = self._balanced_cuts(m, [1.0] * m)
+            if cuts is not None:
+                cut_cands.append(cuts)
+        seen = set()
+        for cuts in cut_cands:
+            key = tuple(cuts)
+            if key in seen:
+                continue
+            seen.add(key)
+            res = self._lpt_assign(cuts, tmats, committed)
+            if res is not None and (best is None
+                                    or res.bottleneck_ms
+                                    < best.bottleneck_ms - _EPS):
+                best = res
+        if best is not None:
+            best.mode = "assign"
+            if base is not None:
+                best.dp_runs = base.dp_runs
+        return best
+
+    @staticmethod
+    def _best_single_move(t, loads, assign, movable):
+        """Best single stage→node move off the current bottleneck node:
+        the (stage, node) pair minimizing the resulting global maximum,
+        or None when no move of a ``movable`` stage strictly lowers it.
+        Shared by the ``assign`` polish and :meth:`plan_partial`, so the
+        two descents cannot drift apart."""
+        n = len(loads)
+        worst = int(np.argmax(loads))
+        second = float(np.sort(loads)[-2]) if n > 1 else 0.0
+        best_move, best_new = None, float(loads[worst])
+        for i in (i for i in movable if assign[i] == worst):
+            rem = float(loads[worst] - t[worst, i])
+            for j in range(n):
+                if j == worst:
+                    continue
+                cand = max(second, rem, float(loads[j] + t[j, i]))
+                if cand < best_new - _EPS:
+                    best_new, best_move = cand, (i, j)
+        return best_move
+
+    def _lpt_assign(self, cuts, tmats, committed=None) -> Optional[PlanResult]:
+        """LPT list scheduling of the stages induced by ``cuts`` onto
+        nodes (min-max objective, node reuse allowed), then a bounded
+        single-stage-move polish: while some move of one stage off the
+        bottleneck node strictly lowers the global maximum, apply the
+        best such move."""
+        m = len(cuts) - 1
+        n = len(tmats)
+        t = np.array([[float(tm[cuts[i], cuts[i + 1]]) for i in range(m)]
+                      for tm in tmats])
+        if not np.all(np.isfinite(t.min(axis=0))):
+            return None              # some stage fits no node at finite time
+        loads = (np.zeros(n) if committed is None
+                 else np.asarray(committed, dtype=np.float64).copy())
+        assign = [0] * m
+        for i in sorted(range(m), key=lambda i: -float(t[:, i].min())):
+            j = int(np.argmin(loads + t[:, i]))
+            assign[i] = j
+            loads[j] += t[j, i]
+        all_stages = range(m)
+        for _ in range(4 * m):
+            move = self._best_single_move(t, loads, assign, all_stages)
+            if move is None:
+                break
+            i, j = move
+            loads[assign[i]] -= t[assign[i], i]
+            loads[j] += t[j, i]
+            assign[i] = j
+        bott = float(loads.max())
+        if not math.isfinite(bott):
+            return None
+        return PlanResult(list(cuts), [], bott, "assign", node_idx=assign)
+
+    # --- bounded re-assignment (partial migrations) --------------------------
+
+    def plan_partial(self, views: Sequence[NodeView], cuts: Sequence[int],
+                     assignment: Sequence[str], max_moves: int,
+                     batch: int = 1, calibration: float = 1.0,
+                     speedup: float = 1.0,
+                     committed_ms: Optional[Dict[str, float]] = None,
+                     weight: float = 1.0) -> Optional[PlanResult]:
+        """Partial migration: keep the cut list fixed, move **at most**
+        ``max_moves`` stages to new nodes (greedy best-move descent on the
+        bottleneck). The candidate's migration cost is only the moved
+        stages' parameter bytes — the cheap alternative the Adaptation
+        Controller weighs against a full re-plan. Stages whose current
+        node is absent from ``views`` (dead or zero-capability) are
+        re-homed first and do not count against ``max_moves`` — repairing
+        availability is not a voluntary move. Returns None when no finite
+        assignment of the fixed cuts exists."""
+        t_start = time.perf_counter()
+        views = [v for v in views if v.capability > 0.0]
+        if not views:
+            return None
+        scale = calibration * batch / speedup
+        tmats = [self._time_matrix(v, batch, scale) for v in views]
+        if weight != 1.0:
+            tmats = [m * weight for m in tmats]
+        committed, floor = self._committed_vector(views, committed_ms)
+        n, m = len(views), len(cuts) - 1
+        t = np.array([[float(tm[cuts[i], cuts[i + 1]]) for i in range(m)]
+                      for tm in tmats])
+        idx_of = {v.node_id: j for j, v in enumerate(views)}
+        assign: List[int] = []
+        forced: List[int] = []
+        for i, nid in enumerate(assignment):
+            j = idx_of.get(nid)
+            if j is None:
+                forced.append(i)
+            assign.append(-1 if j is None else j)
+        loads = (np.zeros(n) if committed is None
+                 else np.asarray(committed, dtype=np.float64).copy())
+        for i, j in enumerate(assign):
+            if j >= 0:
+                loads[j] += t[j, i]
+        for i in forced:                    # dead homes: re-home first
+            j = int(np.argmin(loads + t[:, i]))
+            if not math.isfinite(float(t[j, i])):
+                return None
+            assign[i] = j
+            loads[j] += t[j, i]
+        moved: set = set()
+        for _ in range(max_moves):
+            movable = [i for i in range(m)
+                       if i not in moved and i not in forced]
+            move = self._best_single_move(t, loads, assign, movable)
+            if move is None:
+                break
+            i, j = move
+            loads[assign[i]] -= t[assign[i], i]
+            loads[j] += t[j, i]
+            assign[i] = j
+            moved.add(i)
+        bott = max(float(loads.max()), floor)
+        if not math.isfinite(bott):
+            return None
+        return PlanResult(list(cuts), [views[j].node_id for j in assign],
+                          bott, "partial", node_idx=assign,
+                          moved_stages=len(moved) + len(forced),
+                          elapsed_ms=(time.perf_counter() - t_start) * 1e3)
+
+    # --- per-plan node loads (tenancy budgets) -------------------------------
+
+    def stage_loads(self, cuts: Sequence[int], assignment: Sequence[str],
+                    views: Sequence[NodeView], batch: int = 1,
+                    calibration: float = 1.0, speedup: float = 1.0,
+                    weight: float = 1.0) -> Dict[str, float]:
+        """Per-node time (ms/request, traffic-weighted) one plan charges:
+        the committed budget its tenant contributes to every other
+        tenant's search. Uses the scalar ``_stage_ms`` evaluator, so the
+        budget and the planner's own objective cannot drift apart."""
+        scale = calibration * batch / speedup
+        view_by = {v.node_id: v for v in views}
+        out: Dict[str, float] = {}
+        for i in range(len(cuts) - 1):
+            lo, hi = cuts[i], cuts[i + 1]
+            v = view_by[assignment[i]]
+            ms = _stage_ms(
+                float(self._stage_cost[lo, hi]) * scale,
+                float(self._params_mat[lo, hi] + batch * self._peak_act[lo, hi]),
+                float(self._in_bytes[lo]) * batch if lo > 0 else 0.0,
+                v.profile) * weight
+            out[v.node_id] = out.get(v.node_id, 0.0) + ms
+        return out
+
+    # --- beam fallback (legacy non-contiguous search) ------------------------
+
+    def _beam(self, tmats, n: int, max_stages: int,
+              committed=None) -> Optional[PlanResult]:
         """Width-bounded left-to-right search that may give one node several
         non-contiguous stages (their times add up on that node), capped at
-        ``max_stages`` stages total.
+        ``max_stages`` stages total. Kept as the comparison oracle for the
+        ``assign`` mode that superseded it.
 
         State: (bottleneck over closed stages, per-node busy times, start of
         the open stage, node of the open stage, cuts, stage nodes). At each
         boundary every beam state may cut and open a new stage on any node;
         scoring includes the open stage so long cheap extensions are kept.
+        Per-node busy times start at the committed (other-tenant) budget.
         """
         L = self._L
         width = self.cfg.beam_width
@@ -460,7 +707,9 @@ class PartitionPlanner:
             bott, busy, a, jopen = state[0], state[1], state[2], state[3]
             return max(bott, busy[jopen] + float(tmats[jopen][a, l]))
 
-        beam = [(0.0, tuple([0.0] * n), 0, j, (0,), (j,)) for j in range(n)]
+        busy0 = (tuple([0.0] * n) if committed is None
+                 else tuple(float(c) for c in committed))
+        beam = [(0.0, busy0, 0, j, (0,), (j,)) for j in range(n)]
         for l in range(1, L):
             nxt = list(beam)   # continue the open stage through layer l
             for state in beam:
@@ -482,3 +731,63 @@ class PartitionPlanner:
             return None
         return PlanResult(list(best[4]) + [L], [], final, "beam",
                           node_idx=list(best[5]))
+
+
+# --- joint multi-tenant planning ---------------------------------------------
+
+@dataclass(frozen=True)
+class TenantPlanSpec:
+    """One tenant's inputs to the joint multi-tenant search: its planner
+    (graph + config), cost scaling, and relative traffic weight."""
+    name: str
+    planner: PartitionPlanner
+    batch: int = 1
+    calibration: float = 1.0
+    speedup: float = 1.0
+    weight: float = 1.0
+
+
+def plan_tenants(specs: Sequence[TenantPlanSpec], views: Sequence[NodeView],
+                 rounds: int = 3,
+                 mode: Optional[str] = None) -> Optional[Dict[str, PlanResult]]:
+    """Joint (tenant, stage, node) planning under shared per-node time
+    budgets, by Gauss-Seidel descent: each tenant re-plans (DP, or the
+    given mode) against the weighted per-node time committed by every
+    *other* tenant's current plan, sweeping tenants until no plan changes
+    or ``rounds`` sweeps elapse. The per-tenant subproblem is exact (the
+    DP), so each sweep monotonically improves that tenant's bottleneck
+    given the others — the fixed point is a plan-level equilibrium where
+    no single tenant can improve by re-planning alone.
+
+    Returns {tenant name: PlanResult}, or None if any tenant finds no
+    capacity. Deterministic: tenants are swept in the given order.
+    """
+    results: Dict[str, PlanResult] = {}
+    loads: Dict[str, Dict[str, float]] = {}
+    for _ in range(max(rounds, 1)):
+        changed = False
+        for spec in specs:
+            committed: Dict[str, float] = {}
+            for other, node_ms in loads.items():
+                if other == spec.name:
+                    continue
+                for nid, ms in node_ms.items():
+                    committed[nid] = committed.get(nid, 0.0) + ms
+            res = spec.planner.plan(
+                views, batch=spec.batch, calibration=spec.calibration,
+                speedup=spec.speedup, mode=mode,
+                committed_ms=committed or None, weight=spec.weight)
+            if res is None:
+                return None
+            prev = results.get(spec.name)
+            if (prev is None or res.cuts != prev.cuts
+                    or res.assignment != prev.assignment):
+                changed = True
+            results[spec.name] = res
+            loads[spec.name] = spec.planner.stage_loads(
+                res.cuts, res.assignment, views, batch=spec.batch,
+                calibration=spec.calibration, speedup=spec.speedup,
+                weight=spec.weight)
+        if not changed:
+            break
+    return results

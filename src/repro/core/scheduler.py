@@ -64,6 +64,9 @@ class TaskScheduler:
         self.perf_ratios: Dict[str, List[float]] = {}   # observed / predicted
         self.task_counts: Dict[str, int] = {}
         self.skip_counts: Dict[str, int] = {}
+        #: served execution time per (tenant, node) — the tenancy layer's
+        #: observed counterpart of the planner's per-node time budgets
+        self.node_service_ms: Dict[Tuple[str, str], float] = {}
         self.decisions = 0
         self.overhead_ms = 0.0
 
@@ -78,12 +81,14 @@ class TaskScheduler:
     def _load_score(n: NodeStats) -> float:
         return 1.0 - n.current_load
 
-    def _perf_score(self, node_id: str) -> float:
+    def _perf_score(self, node_id: str,
+                    tmax: Optional[float] = None) -> float:
         hist = self.exec_history.get(node_id)
         if not hist:
             return 1.0
-        all_times = [t for h in self.exec_history.values() for t in h]
-        tmax = max(all_times)
+        if tmax is None:   # fleet-wide max; score_nodes hoists it per call
+            tmax = max((t for h in self.exec_history.values() for t in h),
+                       default=0.0)
         avg = sum(hist) / len(hist)
         norm = avg / tmax if tmax > 0 else 0.0      # normalized to [0, 1]
         return 1.0 / (1.0 + norm)
@@ -98,6 +103,10 @@ class TaskScheduler:
         """Score every node per Eq. 4-8, applying Alg. 1 lines 4-9 skip
         rules (offline / overloaded / high-latency / insufficient)."""
         out = []
+        # the S_P normalizer is fleet-wide: compute it once per scoring
+        # pass, not once per node (it scans every node's history window)
+        tmax = max((t for h in self.exec_history.values() for t in h),
+                   default=0.0)
         for n in nodes:
             if not n.online:
                 out.append(NodeScore(n.node_id, 0, 0, 0, 0, 0, skipped="offline"))
@@ -114,7 +123,7 @@ class TaskScheduler:
                 continue
             s_r = self._resource_score(n, req)
             s_l = self._load_score(n)
-            s_p = self._perf_score(n.node_id)
+            s_p = self._perf_score(n.node_id, tmax)
             s_b = self._balance_score(n.node_id)
             total = (self.weights["resource"] * min(s_r, 1.0)
                      + self.weights["load"] * s_l
@@ -144,11 +153,17 @@ class TaskScheduler:
     # --- history feedback -------------------------------------------------------
 
     def task_completed(self, node_id: str, exec_ms: float,
-                       predicted_ms: Optional[float] = None) -> None:
+                       predicted_ms: Optional[float] = None,
+                       tenant: Optional[str] = None) -> None:
         """Feed one finished task back into the performance history and
         free the node's queue slot. With ``predicted_ms`` (the cost-model
         expectation for that task on that node), the observed/predicted
-        ratio also feeds :meth:`perf_weight`."""
+        ratio also feeds :meth:`perf_weight`. ``tenant`` attributes the
+        served time to a tenancy-layer budget (:attr:`node_service_ms`)."""
+        if tenant is not None:
+            key = (tenant, node_id)
+            self.node_service_ms[key] = (self.node_service_ms.get(key, 0.0)
+                                         + exec_ms)
         h = self.exec_history.setdefault(node_id, [])
         h.append(exec_ms)
         if len(h) > HISTORY_LEN:
@@ -163,7 +178,8 @@ class TaskScheduler:
             self.task_counts[node_id] -= 1
 
     def bulk_complete(self, node_id: str, exec_ms: float, count: int,
-                      predicted_ms: Optional[float] = None) -> None:
+                      predicted_ms: Optional[float] = None,
+                      tenant: Optional[str] = None) -> None:
         """Amortized :meth:`task_completed`: fold ``count`` completions of
         identical duration (the engine's per-stage executions since the last
         monitor poll) into one history/ratio entry plus a ``count``-sized
@@ -175,11 +191,17 @@ class TaskScheduler:
         history."""
         if count <= 0:
             return
-        self.task_completed(node_id, exec_ms, predicted_ms=predicted_ms)
-        if count > 1 and self.task_counts.get(node_id, 0) > 0:
-            # task_completed released one queue slot; release the rest
-            self.task_counts[node_id] = max(
-                0, self.task_counts[node_id] - (count - 1))
+        self.task_completed(node_id, exec_ms, predicted_ms=predicted_ms,
+                            tenant=tenant)
+        if count > 1:
+            if tenant is not None:   # remaining count-1 completions' time
+                key = (tenant, node_id)
+                self.node_service_ms[key] = (self.node_service_ms.get(key, 0.0)
+                                             + exec_ms * (count - 1))
+            if self.task_counts.get(node_id, 0) > 0:
+                # task_completed released one queue slot; release the rest
+                self.task_counts[node_id] = max(
+                    0, self.task_counts[node_id] - (count - 1))
 
     def perf_weight(self, node_id: str) -> float:
         """Multiplicative capability de-rating for the partition planner:
@@ -210,4 +232,6 @@ class TaskScheduler:
             skip_counts=dict(self.skip_counts),
             avg_exec_ms={k: sum(v) / len(v)
                          for k, v in self.exec_history.items() if v},
+            node_service_ms={f"{t}@{n}": round(v, 1)
+                             for (t, n), v in self.node_service_ms.items()},
         )

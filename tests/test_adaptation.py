@@ -169,6 +169,122 @@ def test_scenario_event_helpers_mutate_cluster():
     assert len(c.events) >= 7   # 3 joins + 4 scenario mutations logged
 
 
+def test_overload_raises_batch_cap_before_migrating(graph):
+    """Satellite: on a sustained arrival-overload drift the controller's
+    FIRST response is raising the engine's micro-batch cap (deeper
+    amortization, zero transfer cost); it does not migrate while the cap
+    still has headroom and the raise relieves the overload."""
+    from repro.core.engine import EngineConfig
+    from repro.core.traffic import PoissonArrivals
+    d = _adaptive_pipeline(graph)
+    rep = d.run(150, arrivals=PoissonArrivals(rate_rps=8.0, seed=1),
+                engine=EngineConfig(transfer="overlap", micro_batch=2))
+    caps = [e for e in d.controller.events if e.kind == "batch-cap"]
+    assert caps, "sustained overload must raise the micro-batch cap"
+    assert d.controller.batch_cap is not None
+    assert d.controller.batch_cap > 2
+    # the raised cap actually reached the engine: batches deeper than the
+    # static micro_batch=2 were formed
+    assert max(rep.batch_hist) > 2, rep.batch_hist
+    # relief came before any migration attempt for the overload drift
+    first_cap_t = caps[0].t_ms
+    migrations = [e for e in d.controller.events if e.kind == "migrate"]
+    assert all(m.t_ms > first_cap_t for m in migrations)
+
+
+def test_overload_migrates_once_batch_cap_exhausted(graph):
+    """Satellite, second branch: with no cap headroom
+    (batch_cap_limit == the static micro_batch) persistent overload falls
+    through to the migration path — the controller evaluates candidates
+    instead of raising the cap."""
+    from repro.core.engine import EngineConfig
+    from repro.core.traffic import PoissonArrivals
+    cfg = AdaptationConfig(batch_cap_limit=2)
+    d = _adaptive_pipeline(graph, adaptation=cfg)
+    d.run(150, arrivals=PoissonArrivals(rate_rps=8.0, seed=1),
+          engine=EngineConfig(transfer="overlap", micro_batch=2))
+    assert not any(e.kind == "batch-cap" for e in d.controller.events)
+    assert d.controller.batch_cap is None
+    # the overload drift reached the candidate evaluation: it produced a
+    # migrate or an explicit economics skip, not silence
+    assert any(e.kind in ("migrate", "skip") for e in d.controller.events), \
+        [str(e) for e in d.controller.events]
+
+
+def test_batch_cap_resets_per_stream(graph):
+    """A raised cap is per-stream traffic state: the next run starts from
+    the static configuration again (same contract as rate observations)."""
+    from repro.core.engine import EngineConfig
+    from repro.core.traffic import PoissonArrivals
+    d = _adaptive_pipeline(graph)
+    d.run(150, arrivals=PoissonArrivals(rate_rps=8.0, seed=1),
+          engine=EngineConfig(transfer="overlap", micro_batch=2))
+    assert d.controller.batch_cap is not None
+    rep = d.run(30, engine=EngineConfig(transfer="overlap", micro_batch=2),
+                concurrency=CONCURRENCY)
+    assert max(rep.batch_hist) <= 2          # closed loop, cap back to static
+
+
+# --- partial migrations ------------------------------------------------------
+
+def _planner_pipeline_6nodes(graph, **adaptation_kw):
+    """A 6-node planner-deployed pipeline whose seed makes a localized
+    throttle favor the bounded partial candidate deterministically."""
+    from repro.core.cluster import make_synthetic_cluster
+    cfg = AdaptationConfig(**adaptation_kw)
+    return DistributedInference(make_synthetic_cluster(6, seed=11),
+                                ModelPartitioner(graph), method="planner",
+                                adaptation=cfg), cfg
+
+
+def test_partial_migration_moves_bounded_stages(graph):
+    """A localized drift (one node throttled) is answered by the cheap
+    candidate: at most k stages move, the plan's cuts stay fixed, and the
+    migrate event is tagged partial."""
+    d, _ = _planner_pipeline_6nodes(graph, partial_migration_k=1)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    cuts_before = [p.lo for p in d.plan.partitions]
+    placement_before = dict(d.placement)
+    d.cluster.set_profile(d.placement[1], cpu=0.1, mem_mb=256.0)
+    decision = d.controller.maybe_adapt(force_poll=True)
+    assert decision is not None and decision.migrate
+    assert decision.partial, "localized throttle should pick the partial"
+    assert decision.moved_stages <= 1
+    assert [p.lo for p in d.plan.partitions] == cuts_before   # cuts kept
+    moved = sum(1 for i in placement_before
+                if d.placement[i] != placement_before[i])
+    assert moved == decision.moved_stages
+    assert any(e.kind == "migrate" and "partial" in e.detail
+               for e in d.controller.events)
+
+
+def test_partial_migration_cheaper_than_full_replan(graph):
+    """The partial candidate's predicted transfer cost is the moved
+    stages' parameters only — strictly below re-shipping the plan."""
+    d, cfg = _planner_pipeline_6nodes(graph, partial_migration_k=1)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    d.cluster.set_profile(d.placement[1], cpu=0.1, mem_mb=256.0)
+    decision = d.controller.maybe_adapt(force_poll=True)
+    assert decision is not None and decision.partial
+    # full-replan cost for comparison: ship every non-resident partition
+    # of a fresh candidate (the alternative the controller rejected)
+    stats = d.monitor.snapshots
+    plan, assignment = d.controller._candidate(stats)
+    if plan is not None:
+        full_cost = d.deployer.predicted_migration_ms(
+            plan, assignment, cfg.redeploy_penalty_ms)
+        assert decision.migration_cost_ms <= full_cost + 1e-9
+
+
+def test_partial_disabled_falls_back_to_full(graph):
+    d, _ = _planner_pipeline_6nodes(graph, partial_migration_k=0)
+    d.run(12, name="warm", concurrency=CONCURRENCY)
+    d.cluster.set_profile(d.placement[1], cpu=0.1, mem_mb=256.0)
+    decision = d.controller.maybe_adapt(force_poll=True)
+    assert decision is not None
+    assert not decision.partial
+
+
 def test_node_recovery_triggers_scale_back_up(graph):
     d = _adaptive_pipeline(graph)
     d.run(12, name="warm", concurrency=CONCURRENCY)

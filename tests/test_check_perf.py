@@ -25,6 +25,9 @@ def _result(wall_rate=20000.0, latency=443.93, extra_mode_key=None,
         scale=[dict(config="fast", stages=9, num_requests=100_000,
                     wall_s=5.0, sim_req_per_wall_s=wall_rate,
                     tail_throughput_rps=7.5, sim_makespan_s=13337.6)],
+        multitenant=[dict(config="mt-3x20-openloop", tenants=3,
+                          aggregate_goodput_rps=2.4, wall_s=6.0,
+                          sim_req_per_wall_s=wall_rate)],
     )
 
 
@@ -69,7 +72,33 @@ def test_wall_rate_tolerance_boundary():
     assert check_perf.diff_results(base, at_floor) == []
     below = _result(wall_rate=20000.0 * check_perf.WALL_RATE_TOLERANCE - 1.0)
     problems = check_perf.diff_results(base, below)
-    assert len(problems) == 1 and "hot-path regression" in problems[0]
+    # the helper threads the same wall rate into both wall sections
+    assert len(problems) == 2
+    assert all("hot-path regression" in p for p in problems)
+    assert any(p.startswith("scale/") for p in problems)
+    assert any(p.startswith("multitenant/") for p in problems)
+
+
+def test_multitenant_goodput_exact_but_wall_volatile():
+    """The multitenant section's simulated metrics are exact-compared;
+    its wall fields only feed the tolerance band."""
+    base = _result()
+    drifted = _result()
+    drifted["multitenant"][0]["aggregate_goodput_rps"] = 2.3
+    problems = check_perf.diff_results(base, drifted)
+    assert any("multitenant" in p and "aggregate_goodput_rps" in p
+               for p in problems)
+    slow = _result()
+    slow["multitenant"][0]["wall_s"] = 60.0   # volatile: no exact problem
+    slow["multitenant"][0]["sim_req_per_wall_s"] = (
+        20000.0 * check_perf.WALL_RATE_TOLERANCE)
+    assert check_perf.diff_results(base, slow) == []
+    too_slow = _result()
+    too_slow["multitenant"][0]["sim_req_per_wall_s"] = (
+        20000.0 * check_perf.WALL_RATE_TOLERANCE - 1.0)
+    problems = check_perf.diff_results(base, too_slow)
+    assert any("multitenant" in p and "hot-path regression" in p
+               for p in problems)
 
 
 def test_row_count_change_detected():

@@ -293,3 +293,176 @@ def test_pipeline_does_not_mutate_shared_planner_config():
     b = DistributedInference(make_paper_cluster(), ModelPartitioner(g),
                              method="planner", planner=cfg, num_partitions=3)
     assert len(b.plan.partitions) == 3
+
+
+# --- non-contiguous assignment mode (replaces the beam fallback) --------------
+
+def test_assign_mode_never_worse_than_dp_or_beam():
+    """The min-max assignment search is DP-seeded, so it can only improve
+    on the contiguous optimum — and on the beam's signature win case
+    (heavy-head/heavy-tail) it matches or beats the beam."""
+    g = toy_graph([40e6, 5e6, 40e6], out_bytes=100)
+    planner = PartitionPlanner(g, PlannerConfig(beam_width=32))
+    views = make_views([1.0, 0.4])
+    dp = planner.plan(views, mode="dp")
+    beam = planner.plan(views, mode="beam")
+    asg = planner.plan(views, mode="assign")
+    assert asg.bottleneck_ms <= dp.bottleneck_ms + 1e-9
+    assert asg.bottleneck_ms <= beam.bottleneck_ms + 1e-9
+    # the non-contiguous structure is found: the fast node serves both ends
+    assert asg.assignment.count("n0") == 2
+    assert asg.assignment[1] == "n1"
+
+
+def test_assign_mode_valid_on_mobilenet_cluster():
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = node_views_from_cluster(make_paper_cluster())
+    res = planner.plan(views, mode="assign")
+    assert res.cuts[0] == 0 and res.cuts[-1] == len(g.layers)
+    assert len(res.assignment) == res.stages
+    assert math.isfinite(res.bottleneck_ms)
+    dp = planner.plan(views, mode="dp")
+    assert res.bottleneck_ms <= dp.bottleneck_ms + 1e-9
+
+
+# --- per-node committed time budgets (tenancy) --------------------------------
+
+def test_committed_load_steers_plan_away():
+    """A node fully committed to another tenant stops attracting stages,
+    and the committed load floors the reported bottleneck."""
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = make_views([1.0, 1.0, 0.6])
+    free = planner.plan(views, mode="dp")
+    assert "n0" in free.assignment
+    loaded = planner.plan(views, mode="dp", committed_ms={"n0": 1e6})
+    assert "n0" not in loaded.assignment
+    assert loaded.bottleneck_ms >= 1e6
+
+
+def test_weight_scales_objective_not_structure():
+    """Tenant traffic weight scales the bottleneck linearly for a fixed
+    structure (it compares tenants in shared utilization units)."""
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = make_views([1.0, 0.8, 0.6])
+    base = planner.plan(views, mode="dp")
+    double = planner.plan(views, mode="dp", weight=2.0)
+    assert double.cuts == base.cuts
+    assert double.assignment == base.assignment
+    assert double.bottleneck_ms == pytest.approx(2.0 * base.bottleneck_ms)
+
+
+def test_stage_loads_matches_bottleneck():
+    """stage_loads is the planner's own objective decomposed per node:
+    its max equals the plan's reported bottleneck."""
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = make_views([1.0, 0.8, 0.6])
+    res = planner.plan(views, mode="dp")
+    loads = planner.stage_loads(res.cuts, res.assignment, views)
+    assert max(loads.values()) == pytest.approx(res.bottleneck_ms)
+
+
+# --- partial migrations -------------------------------------------------------
+
+def test_plan_partial_respects_move_budget():
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = make_views([1.0, 0.9, 0.8, 0.7])
+    base = planner.plan(views, mode="dp")
+    # throttle the node serving the heaviest stage: its view worsens
+    throttled = [NodeView(v.node_id,
+                          v.profile if v.node_id != base.assignment[0]
+                          else PROFILES["low"], 0.4
+                          if v.node_id == base.assignment[0]
+                          else v.capability)
+                 for v in views]
+    for k in (1, 2):
+        res = planner.plan_partial(throttled, base.cuts, base.assignment, k)
+        assert res is not None
+        assert res.moved_stages <= k
+        assert res.cuts == base.cuts
+        diffs = sum(1 for a, b in zip(res.assignment, base.assignment)
+                    if a != b)
+        assert diffs == res.moved_stages
+
+
+def test_plan_partial_rehomes_dead_nodes_first():
+    """Stages on nodes absent from the views (dead) are re-homed without
+    consuming the voluntary move budget."""
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = make_views([1.0, 0.9, 0.8])
+    base = planner.plan(views, mode="dp")
+    dead = base.assignment[0]
+    survivors = [v for v in views if v.node_id != dead]
+    res = planner.plan_partial(survivors, base.cuts, base.assignment,
+                               max_moves=0)
+    assert res is not None
+    assert dead not in res.assignment
+    assert res.moved_stages >= 1          # the forced re-home counts
+
+
+def test_plan_partial_improves_or_holds_bottleneck():
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = make_views([1.0, 0.5, 0.5, 0.5])
+    base = planner.plan(views, mode="dp")
+    res = planner.plan_partial(views, base.cuts, base.assignment,
+                               max_moves=2)
+    assert res is not None
+    assert res.bottleneck_ms <= base.bottleneck_ms + 1e-9
+
+
+# --- joint multi-tenant planning ----------------------------------------------
+
+def test_plan_tenants_spreads_load():
+    """Two equal tenants under joint planning must not both bottleneck
+    the same node: the Gauss-Seidel equilibrium is no worse for each
+    tenant than naive oblivious planning (both taking the solo optimum),
+    evaluated under the true shared-load objective."""
+    from repro.core.planner import TenantPlanSpec, plan_tenants
+    g = mobilenetv2_graph()
+    views = make_views([1.0, 0.9, 0.8, 0.5])
+    specs = [TenantPlanSpec("a", PartitionPlanner(g)),
+             TenantPlanSpec("b", PartitionPlanner(g))]
+    joint = plan_tenants(specs, views)
+    assert joint is not None and set(joint) == {"a", "b"}
+    # oblivious: both tenants adopt the identical solo plan
+    solo = PartitionPlanner(g).plan(views, mode="dp")
+
+    def shared_bottleneck(res_a, res_b):
+        loads = {}
+        for spec, res in (("a", res_a), ("b", res_b)):
+            l = PartitionPlanner(g).stage_loads(res.cuts, res.assignment,
+                                                views)
+            for nid, ms in l.items():
+                loads[nid] = loads.get(nid, 0.0) + ms
+        return max(loads.values())
+
+    joint_bott = shared_bottleneck(joint["a"], joint["b"])
+    oblivious_bott = shared_bottleneck(solo, solo)
+    assert joint_bott <= oblivious_bott + 1e-9
+    # and the plans actually differ (the second tenant routed around)
+    assert (joint["a"].assignment != joint["b"].assignment
+            or joint["a"].cuts != joint["b"].cuts)
+
+
+def test_plan_tenants_respects_weights():
+    """A heavy tenant's committed load dominates: the light tenant's
+    joint plan avoids the heavy tenant's bottleneck node."""
+    from repro.core.planner import TenantPlanSpec, plan_tenants
+    g = mobilenetv2_graph()
+    views = make_views([1.0, 0.9, 0.8, 0.5])
+    specs = [TenantPlanSpec("heavy", PartitionPlanner(g), weight=4.0),
+             TenantPlanSpec("light", PartitionPlanner(g), weight=0.25)]
+    joint = plan_tenants(specs, views)
+    assert joint is not None
+    heavy_loads = PartitionPlanner(g).stage_loads(
+        joint["heavy"].cuts, joint["heavy"].assignment, views, weight=4.0)
+    heavy_bottleneck = max(heavy_loads, key=lambda nid: heavy_loads[nid])
+    light_on_bottleneck = [nid for nid in joint["light"].assignment
+                           if nid == heavy_bottleneck]
+    assert len(light_on_bottleneck) <= 1

@@ -1,0 +1,387 @@
+"""Multi-tenant serving core: single-tenant bit parity through the tenancy
+layer, cross-tenant isolation invariants, budget views, and arbitration."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.adaptation import cpu_throttle, node_death
+from repro.core.cluster import make_paper_cluster, make_synthetic_cluster
+from repro.core.engine import EngineConfig, MultiTenantEngine
+from repro.core.partitioner import ModelPartitioner
+from repro.core.pipeline import DistributedInference
+from repro.core.tenancy import (CrossTenantArbiter, Tenant, TenantRegistry,
+                                TenantTraffic)
+from repro.core.traffic import DeterministicArrivals, PoissonArrivals
+from repro.models.graph import LayerSpec, ModelGraph, mobilenetv2_graph
+
+COLUMNS = ("submit_ms", "finish_ms", "comm_ms", "service_ms",
+           "cache_hits", "stages", "arrival_ms")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return mobilenetv2_graph()
+
+
+def tiny_graph(n_layers=6, seed=0):
+    layers = [
+        LayerSpec(name=f"l{i}", kind="Linear",
+                  params=20_000 * (1 + (seed + i) % 3),
+                  cost=4e5 * (1 + (seed + 2 * i) % 5),
+                  out_bytes=40_000 * (1 + (seed + i) % 4))
+        for i in range(n_layers)]
+    return ModelGraph(f"tiny-{n_layers}-{seed}", layers)
+
+
+def _assert_bit_equal(rep_a, rep_b):
+    ca, cb = rep_a.columns, rep_b.columns
+    for f in COLUMNS:
+        a, b = getattr(ca, f), getattr(cb, f)
+        assert np.array_equal(a, b), (
+            f"column {f} diverges at requests "
+            f"{np.flatnonzero(a != b)[:5].tolist()}")
+    assert rep_a.network_bytes == rep_b.network_bytes
+
+
+# --- plan ownership lives on the tenant --------------------------------------
+
+def test_plan_ownership_delegates_to_tenant(graph):
+    d = DistributedInference(make_paper_cluster(), ModelPartitioner(graph))
+    assert d.plan is d.tenant.plan
+    assert d.placement is d.tenant.placement
+    marker = d.partitioner.plan(2)
+    d.plan = marker                      # property setter writes through
+    assert d.tenant.plan is marker
+
+
+def test_deployments_tagged_with_tenant(graph):
+    t = Tenant("vision")
+    d = DistributedInference(make_paper_cluster(), ModelPartitioner(graph),
+                             tenant=t)
+    assert all(dep.tenant == "vision"
+               for dep in d.deployer.deployments.values())
+    committed = d.deployer.committed_mb(tenant="vision")
+    assert committed and all(mb > 0 for mb in committed.values())
+    assert d.deployer.committed_mb(tenant="other") == {}
+    assert t.committed_mb() == committed
+
+
+def test_registry_budget_views(graph):
+    cluster = make_paper_cluster()
+    reg = TenantRegistry(cluster)
+    reg.add("a", ModelPartitioner(graph))
+    reg.add("b", ModelPartitioner(tiny_graph()),
+            traffic=TenantTraffic(weight=2.0))
+    mem = reg.committed_mb()
+    assert set(mem) == {"a", "b"}
+    budgets = reg.node_time_ms()
+    assert budgets and all(ms > 0 for ms in budgets.values())
+    # exclusion removes exactly that tenant's contribution
+    only_b = reg.node_time_ms(exclude="a")
+    b_budget = reg.tenants["b"].node_time_ms()
+    assert only_b == pytest.approx(b_budget)
+    # the weight scales tenant b's budget linearly
+    unweighted = reg.tenants["b"].node_time_ms(weighted=False)
+    for nid, ms in b_budget.items():
+        assert ms == pytest.approx(2.0 * unweighted[nid])
+
+
+def test_tenant_budget_matches_planner_stage_loads(graph):
+    """The tenant's per-node time budget and the planner's own objective
+    decomposition (``stage_loads``) are two views of the same quantity —
+    pin them against each other so the committed budgets the live engine
+    refreshes cannot drift from what ``plan_tenants`` optimizes."""
+    from repro.core.planner import NodeView, PartitionPlanner
+    cluster = make_paper_cluster()
+    reg = TenantRegistry(cluster)
+    t = reg.add("a", ModelPartitioner(graph), method="planner")
+    p = t.pipeline
+    views = [NodeView(nid, cluster.nodes[nid].profile, 1.0)
+             for nid in set(t.placement.values())]
+    parts = t.plan.partitions
+    cuts = [part.lo for part in parts] + [parts[-1].hi]
+    assignment = [t.placement[i] for i in range(len(parts))]
+    loads = PartitionPlanner(p.partitioner.graph).stage_loads(
+        cuts, assignment, views, batch=p.batch,
+        calibration=p.partitioner.calibration, speedup=p.deployer.speedup)
+    budget = t.node_time_ms()
+    assert set(loads) == set(budget)
+    for nid in loads:
+        assert budget[nid] == pytest.approx(loads[nid], rel=1e-9)
+
+
+# --- single-tenant parity: the tenancy layer must not move a single bit ------
+
+@pytest.mark.parametrize("cfg", [
+    None,                                        # legacy fast path
+    EngineConfig(transfer="serial"),
+    EngineConfig(transfer="legacy", micro_batch=2),
+    EngineConfig(transfer="overlap", micro_batch=4, fabric="shared"),
+])
+def test_single_tenant_registry_parity(graph, cfg):
+    """A 1-tenant run through TenantRegistry.run reproduces a direct
+    DistributedInference.run bit-for-bit: metrics, request columns, and
+    the adaptation event log, across transfer models."""
+    def scenario_for(d):
+        t0 = d.cluster.clock.now_ms
+        return [cpu_throttle(t0 + 700.0, "edge-0-high")]
+
+    d_direct = DistributedInference(make_paper_cluster(),
+                                    ModelPartitioner(graph), adaptive=True)
+    rep_direct = d_direct.run(40, name="solo", seed=3, concurrency=4,
+                              scenario=scenario_for(d_direct), engine=cfg)
+
+    reg = TenantRegistry(make_paper_cluster())
+    tenant = reg.add("solo", ModelPartitioner(graph), adaptive=True,
+                     traffic=TenantTraffic(num_requests=40, seed=3,
+                                           concurrency=4))
+    rep_reg = reg.run(scenario=scenario_for(tenant.pipeline), engine=cfg)
+
+    _assert_bit_equal(rep_direct, rep_reg["solo"])
+    assert (rep_direct.adaptation["events"]
+            == rep_reg["solo"].adaptation["events"])
+    assert (rep_direct.adaptation["migrations"]
+            == rep_reg["solo"].adaptation["migrations"])
+
+
+@pytest.mark.parametrize("cfg", [
+    EngineConfig(transfer="serial"),
+    EngineConfig(transfer="overlap", micro_batch=4),
+])
+def test_multitenant_loop_single_stream_parity(graph, cfg):
+    """The shared multi-stream event loop itself (not the registry's
+    1-tenant delegation): MultiTenantEngine with one tenant must equal
+    the single-tenant event path bit-for-bit."""
+    d_direct = DistributedInference(make_paper_cluster(),
+                                    ModelPartitioner(graph))
+    rep_direct = d_direct.run(60, name="solo", seed=5, engine=cfg,
+                              arrivals=PoissonArrivals(rate_rps=1.2, seed=5))
+
+    t = Tenant("solo", traffic=TenantTraffic(
+        num_requests=60, seed=5,
+        arrivals=PoissonArrivals(rate_rps=1.2, seed=5)))
+    DistributedInference(make_paper_cluster(), ModelPartitioner(graph),
+                         tenant=t)
+    reps = MultiTenantEngine(t.pipeline.cluster, [t]).run(config=cfg)
+    _assert_bit_equal(rep_direct, reps["solo"])
+
+
+# --- multi-tenant isolation invariants ---------------------------------------
+
+def _three_tenant_registry(n=60, adaptive=False):
+    cluster = make_synthetic_cluster(10, seed=3)
+    reg = TenantRegistry(cluster)
+    reg.add("mobilenet", ModelPartitioner(mobilenetv2_graph()),
+            method="planner", adaptive=adaptive,
+            traffic=TenantTraffic(num_requests=n, seed=1,
+                                  arrivals=PoissonArrivals(rate_rps=2.0,
+                                                           seed=1)))
+    reg.add("tiny-a", ModelPartitioner(tiny_graph(6, 1)),
+            method="planner", adaptive=adaptive,
+            traffic=TenantTraffic(num_requests=n, seed=2,
+                                  arrivals=DeterministicArrivals.at_rate(3.0)))
+    reg.add("tiny-b", ModelPartitioner(tiny_graph(5, 2)),
+            method="planner", adaptive=adaptive,
+            traffic=TenantTraffic(num_requests=n, seed=3))  # closed loop
+    return reg
+
+
+def test_multitenant_isolation_invariants():
+    reg = _three_tenant_registry()
+    rep = reg.run(engine=EngineConfig(transfer="overlap", micro_batch=4))
+    assert rep.num_requests == 180
+    for name in ("mobilenet", "tiny-a", "tiny-b"):
+        r = rep[name]
+        c = r.columns
+        # per-tenant conservation: every request finished after arriving
+        assert len(c) == 60
+        assert bool(np.all(c.finish_ms > c.arrival_ms))
+        # FIFO within a tenant: submission follows request order
+        assert bool(np.all(np.diff(c.submit_ms) >= 0))
+        # per-tenant goodput can never exceed its own offered load
+        assert (r.goodput_rps(2000.0)
+                <= r.offered_load_rps + 1e-9)
+    # residual backlog would break conservation on the next run
+    assert all(n.queue_depth == 0 for n in reg.cluster.nodes.values())
+
+
+def test_multitenant_fifo_within_tenant_unbatched():
+    """With batching off and isolated links, service within one tenant is
+    strictly in order even while other tenants interleave on the same
+    nodes: finish times are non-decreasing in request index."""
+    reg = _three_tenant_registry()
+    rep = reg.run(engine=EngineConfig(transfer="overlap"))
+    for name in ("mobilenet", "tiny-a", "tiny-b"):
+        f = rep[name].columns.finish_ms
+        assert bool(np.all(np.diff(f) >= 0)), f"{name} overtook itself"
+
+
+def test_multitenant_interleaving_bit_deterministic():
+    """Two identical interleaved runs are bit-for-bit equal per tenant,
+    regardless of global RNG state (the seeded-RNG contract extends to
+    the tenancy layer)."""
+    def run_once():
+        reg = _three_tenant_registry()
+        return reg.run(engine=EngineConfig(transfer="overlap",
+                                           micro_batch=4, fabric="shared"))
+    rep1 = run_once()
+    np.random.seed(1234)            # scramble global RNG between runs
+    random.seed(5678)
+    rep2 = run_once()
+    for name in ("mobilenet", "tiny-a", "tiny-b"):
+        _assert_bit_equal(rep1[name], rep2[name])
+
+
+def test_multitenant_tenant_busy_attribution():
+    """Every execution is charged to its owning tenant: the per-node
+    tenant_busy_ms split is complete (sums match cumulative busy time
+    charged by the engine) and names only registered tenants."""
+    reg = _three_tenant_registry()
+    reg.run(engine=EngineConfig(transfer="overlap"))
+    names = set(reg.tenants)
+    seen = set()
+    for node in reg.cluster.nodes.values():
+        for tname, ms in node.tenant_busy_ms.items():
+            assert tname in names
+            assert ms > 0
+            seen.add(tname)
+    assert seen == names            # every tenant actually ran somewhere
+
+
+def test_multitenant_contention_slower_than_solo():
+    """Sharing the cluster costs throughput: a tenant's goodput under
+    two co-residents is no better than serving it alone on the same
+    nodes (sanity: tenancy actually contends for shared capacity)."""
+    def solo():
+        cluster = make_synthetic_cluster(10, seed=3)
+        reg = TenantRegistry(cluster)
+        reg.add("mobilenet", ModelPartitioner(mobilenetv2_graph()),
+                method="planner",
+                traffic=TenantTraffic(num_requests=60, seed=1,
+                                      arrivals=PoissonArrivals(rate_rps=2.0,
+                                                               seed=1)))
+        return reg.run(engine=EngineConfig(transfer="overlap"))
+    solo_rep = solo()
+    shared_rep = _three_tenant_registry().run(
+        engine=EngineConfig(transfer="overlap"))
+    assert (shared_rep["mobilenet"].p99_sojourn_ms
+            >= solo_rep["mobilenet"].p99_sojourn_ms - 1e-9)
+
+
+# --- cross-tenant arbitration ------------------------------------------------
+
+def _two_adaptive_tenants(cluster_seed=11):
+    cluster = make_synthetic_cluster(6, seed=cluster_seed)
+    reg = TenantRegistry(cluster)
+    for i, name in enumerate(("alpha", "beta")):
+        reg.add(name, ModelPartitioner(mobilenetv2_graph()),
+                method="planner", adaptive=True,
+                traffic=TenantTraffic(
+                    num_requests=120, seed=i, concurrency=8,
+                    arrivals=PoissonArrivals(rate_rps=1.5, seed=i)))
+    return reg
+
+
+def _shared_throttle_scenario(reg):
+    """Throttle a node serving both tenants (if any; else the busiest),
+    mid-run — the drift that makes every controller want to move."""
+    t0 = reg.cluster.clock.now_ms
+    used = {}
+    for t in reg.tenants.values():
+        for nid in t.placement.values():
+            used[nid] = used.get(nid, 0) + 1
+    victim = max(sorted(used), key=lambda nid: used[nid])
+    return [cpu_throttle(t0 + 3000.0, victim, cpu=0.1, mem_mb=256.0)]
+
+
+def test_arbitration_applies_at_most_one_migration_per_tick():
+    reg = _two_adaptive_tenants()
+    rep = reg.run(scenario=_shared_throttle_scenario(reg),
+                  engine=EngineConfig(transfer="overlap"),
+                  arbitration=True)
+    assert rep.arbitration is not None
+    assert rep.arbitration["applied"] >= 1   # the throttle did trigger moves
+    # every migrate event across tenants sits at a distinct control tick
+    times = []
+    for name in ("alpha", "beta"):
+        ad = rep[name].adaptation
+        times += [line.split("ms]")[0] for line in ad["events"]
+                  if "] migrate" in line]
+    assert times, "scenario produced no migrations — test is vacuous"
+    assert len(times) == len(set(times)), \
+        f"two migrations applied at one arbitration tick: {times}"
+
+
+def test_arbitration_defers_losing_tenant():
+    """Both tenants want to move off the throttled node at the same
+    tick: exactly one wins it, the other is deferred (and may apply a
+    cheaper partial migration at a later tick)."""
+    reg = _two_adaptive_tenants()
+    rep = reg.run(scenario=_shared_throttle_scenario(reg),
+                  engine=EngineConfig(transfer="overlap"),
+                  arbitration=True)
+    assert rep.arbitration["deferred"] >= 1
+    lines = [line for name in ("alpha", "beta")
+             for line in rep[name].adaptation["events"]]
+    assert any("arbitration-deferred" in line for line in lines)
+
+
+def test_independent_mode_skips_arbitration():
+    reg = _two_adaptive_tenants()
+    rep = reg.run(scenario=_shared_throttle_scenario(reg),
+                  engine=EngineConfig(transfer="overlap"),
+                  arbitration=False)
+    assert rep.arbitration is None
+    lines = [line for name in ("alpha", "beta")
+             for line in rep[name].adaptation["events"]]
+    assert not any("arbitration-deferred" in line for line in lines)
+
+
+def test_arbiter_applies_service_down_unconditionally(graph):
+    """A dead placement node is never arbitrated away: both tenants'
+    repairs apply even if they land on the same tick."""
+    cluster = make_paper_cluster()
+    reg = TenantRegistry(cluster)
+    for i, name in enumerate(("alpha", "beta")):
+        reg.add(name, ModelPartitioner(graph), method="planner",
+                adaptive=True,
+                traffic=TenantTraffic(num_requests=80, seed=i,
+                                      concurrency=4))
+    # kill a node hosting stages of both tenants mid-run
+    victims = (set(reg.tenants["alpha"].placement.values())
+               & set(reg.tenants["beta"].placement.values()))
+    victim = sorted(victims)[0] if victims else "edge-0-high"
+    t0 = cluster.clock.now_ms
+    rep = reg.run(scenario=[node_death(t0 + 2000.0, victim)],
+                  engine=EngineConfig(transfer="overlap"), arbitration=True)
+    for name in ("alpha", "beta"):
+        assert victim not in reg.tenants[name].placement.values()
+        if victim in _placement_history(rep[name]):
+            assert rep[name].adaptation["migrations"] >= 1
+
+
+def _placement_history(report):
+    """Node ids mentioned in a report's migrate events (helper)."""
+    out = set()
+    for line in (report.adaptation or {}).get("events", []):
+        if "migrate" in line:
+            out.update(tok.strip("{},:") for tok in line.split()
+                       if tok.startswith("edge-"))
+    return out
+
+
+# --- report aggregation ------------------------------------------------------
+
+def test_multitenant_report_aggregates():
+    reg = _three_tenant_registry()
+    rep = reg.run(engine=EngineConfig(transfer="overlap"))
+    row = rep.row()
+    assert row["tenants"] == 3
+    assert row["num_requests"] == 180
+    per_tenant = sum(rep[name].columns.deadline_met(2000.0).sum()
+                     for name in rep.reports)
+    expected = 1000.0 * per_tenant / rep.makespan_ms
+    assert rep.goodput_rps() == pytest.approx(expected)
+    assert rep.makespan_ms > 0

@@ -279,6 +279,191 @@ def test_shared_fabric_keeps_sender_tx_serialization(graph):
                               getattr(shared.columns, f)), f
 
 
+# --- max-min fabric: per-sender uplinks ---------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(nflows=st.integers(min_value=1, max_value=8),
+       nnodes=st.integers(min_value=2, max_value=5),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_maxmin_rates_properties(nflows, nnodes, seed):
+    """The progressive-filling allocator satisfies the defining max-min
+    properties on sampled topologies: non-negative rates, no link over
+    capacity, and every flow bottlenecked at some saturated link where no
+    co-resident flow gets a higher rate."""
+    from repro.core.fabric import maxmin_rates
+    rnd = random.Random(seed)
+    caps = {}
+    flows = []
+    for i in range(nflows):
+        tx = f"tx:n{rnd.randrange(nnodes)}"
+        rx = f"rx:n{rnd.randrange(nnodes)}"
+        for link in (tx, rx):
+            caps.setdefault(link, rnd.choice([1.0, 2.0, 5.0, 10.0]))
+        flows.append((tx, rx))
+    rates = maxmin_rates(flows, caps)
+    assert all(r >= 0.0 for r in rates)
+    load = {}
+    for links, r in zip(flows, rates):
+        for link in links:
+            load[link] = load.get(link, 0.0) + r
+    for link, used in load.items():
+        assert used <= caps[link] + 1e-9, f"{link} over capacity"
+    # max-min certificate: each flow saturates some link where its rate
+    # is maximal among that link's flows
+    for i, links in enumerate(flows):
+        ok = False
+        for link in links:
+            saturated = load[link] >= caps[link] - 1e-9
+            is_max = all(rates[j] <= rates[i] + 1e-9
+                         for j, lj in enumerate(flows) if link in lj)
+            if saturated and is_max:
+                ok = True
+        assert ok, f"flow {i} not max-min bottlenecked"
+
+
+def test_maxmin_solo_flow_matches_isolated(graph):
+    """The dual-endpoint fabric keeps the solo-flow guarantee: a run in
+    which no two flows ever overlap on either endpoint is bit-for-bit
+    the isolated accounting (window-1 closed loop can never overlap)."""
+    iso = _fresh(graph).run(40, concurrency=1,
+                            engine=EngineConfig(transfer="overlap"))
+    mm = _fresh(graph).run(40, concurrency=1,
+                           engine=EngineConfig(transfer="overlap",
+                                               fabric="maxmin"))
+    for f in COLUMNS:
+        assert np.array_equal(getattr(iso.columns, f),
+                              getattr(mm.columns, f)), f
+    assert mm.fabric_stats["shared_flows"] == 0
+
+
+def test_maxmin_uplink_throttles_fanout(graph):
+    """A node hosting two stages fans out to two receivers: under
+    receiver-only sharing its sends queue on the tx FIFO; under max-min
+    they run concurrently but split the sender's uplink. Choking the
+    sender's uplink must slow delivery vs. an unconstrained one —
+    the contention the receiver-only model cannot express."""
+    def run_once(sender_bw):
+        cluster = make_paper_cluster()
+        cluster.set_profile("edge-0-high", net_bw_mbps=sender_bw)
+        d = DistributedInference(
+            cluster, ModelPartitioner(graph), num_partitions=3,
+            assignment=["edge-0-high", "edge-0-high", "edge-1-medium"])
+        return d.run(60, engine=EngineConfig(transfer="overlap",
+                                             fabric="maxmin"))
+    slow = run_once(2.0)       # choked uplink: concurrent sends split 2 Mbps
+    fast = run_once(800.0)
+    assert slow.fabric_stats["shared_flows"] > 0
+    assert (slow.tail_throughput_rps() < fast.tail_throughput_rps())
+
+
+def test_maxmin_solo_slow_uplink_uses_fluid_accounting():
+    """Regression: a SOLO flow behind a sender uplink slower than its
+    receiver downlink must fall to fluid (uplink-bound) accounting — the
+    receiver-based solo time would stamp delivery before the event that
+    releases it and hide the uplink wait from sojourn entirely."""
+    from repro.core.fabric import FairShareFabric
+    f = FairShareFabric(shared_uplinks=True)
+    # 1000 bits, receiver drains 100 bits/ms (solo_ms = 1 + 10), but the
+    # sender's uplink only drains 1 bit/ms -> true wire time ~1000 ms
+    ver, nxt = f.start("rx-node", 100.0, 1000.0, 11.0, 1.0, "payload", 0.0,
+                       sender_id="tx-node", sender_rate=1.0)
+    assert nxt == pytest.approx(1000.0)          # uplink-bound completion
+    delivered, _ = f.on_event("rx-node", ver, nxt)
+    (payload, at, elapsed), = delivered
+    assert payload == "payload"
+    assert at >= nxt                             # never delivered in the past
+    assert at == pytest.approx(1001.0)           # bw completion + latency
+    assert elapsed == pytest.approx(1001.0)
+    assert f.stats()["shared_flows"] == 1        # left the isolated path
+
+
+def test_maxmin_uplink_shared_but_downlink_bound_keeps_parity():
+    """The complement: two flows share a sender uplink wide enough that
+    each still gets its full receiver rate — isolated accounting remains
+    exactly correct, so neither flow is disturbed."""
+    from repro.core.fabric import FairShareFabric
+    f = FairShareFabric(shared_uplinks=True)
+    # uplink 200 bits/ms shared by two flows; each receiver takes 100
+    v1, _ = f.start("rx-a", 100.0, 1000.0, 11.0, 1.0, "p1", 0.0,
+                    sender_id="tx", sender_rate=200.0)
+    v2, nxt = f.start("rx-b", 100.0, 1000.0, 11.0, 1.0, "p2", 0.0,
+                      sender_id="tx", sender_rate=200.0)
+    delivered, _ = f.on_event("rx-b", v2, nxt)
+    assert all(at == pytest.approx(11.0) and el == pytest.approx(11.0)
+               for _, at, el in delivered)       # exact solo accounting
+    assert f.stats()["shared_flows"] == 0
+
+
+def test_maxmin_conservation_and_determinism(graph):
+    """Max-min runs drain fully and are bit-reproducible."""
+    def run_once():
+        d = _fresh(graph, num_partitions=3,
+                   assignment=list(BOTTLENECK_SENDS))
+        rep = d.run(50, engine=EngineConfig(transfer="overlap",
+                                            micro_batch=3, fabric="maxmin"),
+                    arrivals=PoissonArrivals(rate_rps=3.0, seed=5))
+        assert all(n.queue_depth == 0 for n in d.cluster.nodes.values())
+        return rep
+    rep1 = run_once()
+    np.random.seed(99)
+    rep2 = run_once()
+    for f in COLUMNS:
+        assert np.array_equal(getattr(rep1.columns, f),
+                              getattr(rep2.columns, f)), f
+
+
+# --- per-stage adaptive micro-batch -------------------------------------------
+
+def test_adaptive_batch_light_load_equals_unbatched(graph):
+    """Satellite regression: under light open-loop load the per-STAGE
+    backlog never reaches the adaptive step, so every batch is size 1 and
+    the run is bit-for-bit the micro_batch=1 run — head-of-batch latency
+    is exactly the unbatched latency, never inflated by amortization the
+    load didn't need."""
+    light = PoissonArrivals(rate_rps=0.5, seed=7)
+    adaptive = _fresh(graph).run(
+        60, arrivals=light,
+        engine=EngineConfig(transfer="overlap", micro_batch=8,
+                            adaptive_batch=True))
+    unbatched = _fresh(graph).run(
+        60, arrivals=light, engine=EngineConfig(transfer="overlap"))
+    assert set(adaptive.batch_hist) == {1}, adaptive.batch_hist
+    for f in COLUMNS:
+        assert np.array_equal(getattr(adaptive.columns, f),
+                              getattr(unbatched.columns, f)), f
+
+
+def test_adaptive_batch_counts_per_stage_backlog(graph):
+    """The adaptive cap follows the served stage's own backlog, not the
+    node's total queue: another tenant's standing backlog on the same
+    node must not unlock deep batches for a lightly-loaded stage."""
+    from repro.core.engine import MultiTenantEngine
+    from repro.core.tenancy import Tenant, TenantTraffic
+    from repro.core.cluster import make_paper_cluster as _mpc
+
+    def tenants(cluster):
+        heavy = Tenant("heavy", traffic=TenantTraffic(
+            num_requests=80, concurrency=64,
+            arrivals=DeterministicArrivals(0.0)))   # burst: deep backlog
+        light = Tenant("light", traffic=TenantTraffic(
+            num_requests=12, concurrency=2,
+            arrivals=DeterministicArrivals.at_rate(0.5)))
+        for t in (heavy, light):
+            DistributedInference(cluster, ModelPartitioner(graph),
+                                 num_partitions=1,
+                                 assignment=["edge-0-high"], tenant=t)
+        return [heavy, light]
+
+    cluster = _mpc()
+    reps = MultiTenantEngine(cluster, tenants(cluster)).run(
+        config=EngineConfig(transfer="overlap", micro_batch=8,
+                            adaptive_batch=True))
+    # the bursty tenant amortizes; the light tenant's head-of-batch
+    # latency stays bounded: its batches never grow past its own backlog
+    assert max(reps["heavy"].batch_hist) > 1
+    assert max(reps["light"].batch_hist) <= 2, reps["light"].batch_hist
+
+
 # --- explicit-RNG isolation ---------------------------------------------------
 
 def test_no_global_rng_dependence(graph):
