@@ -27,6 +27,18 @@ Five sections, written to ``BENCH_pipeline.json`` (repo root):
     Poisson open-loop arrival process. Asserts the single-digit-second
     wall-time budget and reports simulated-requests-per-wall-second — the
     engine's figure of merit.
+``batchcurve``
+    The batch-aware planner vs the k=1 planner on a micro-batched
+    open-loop stream. A graph with a large-activation front half and a
+    fast-but-memory-tight node makes the two objectives disagree: the
+    k=1 planner parks the heavy stage on the fast node (best per-item
+    time), the batch-aware planner sees the k-scaled working set cross
+    that node's memory at the operating micro-batch and routes around
+    the thrash knee. Both plans run the identical overloaded open-loop
+    stream; the batch-aware plan must win on predicted bottleneck *and*
+    simulated goodput (asserted in-bench, pinned exactly). A final row
+    prints the committed kernel-calibration artifact's predicted
+    testbed bottleneck next to the analytic model's.
 ``multitenant``
     The tenancy layer at scale and under arbitration. (a) 3 tenants ×
     20 nodes × 10k open-loop requests each through one shared event heap
@@ -260,6 +272,124 @@ def scale_rows(num_requests: int = 100_000, nodes: int = SCALE_NODES,
     return rows
 
 
+# --- batch-aware planning ----------------------------------------------------
+
+#: the operating micro-batch of the batchcurve scenario (and the expected_k
+#: the batch-aware planner costs stages at)
+BC_K = 8
+BC_REQUESTS = 800
+BC_RATE_RPS = 75.0           # above the k=1 plan's batched capacity knee
+BC_DEADLINE_MS = 800.0
+BC_SEED = 17
+#: large per-layer activation of the front half: at k=1 it fits the fast
+#: node's memory; at BC_K the k-scaled working set crosses it (thrash knee)
+BC_HEAVY_ACT = 8 * 1024 * 1024
+
+
+def batchcurve_graph():
+    """Synthetic 12-layer graph whose k=1-optimal and batch-aware-optimal
+    plans differ: a compute-heavy, large-activation front half and a
+    lighter, small-activation back half."""
+    from repro.models.graph import LayerSpec, ModelGraph
+    layers = []
+    for i in range(6):
+        ob = BC_HEAVY_ACT if i < 5 else 64 * 1024
+        layers.append(LayerSpec(f"heavy{i}", "Conv2d", 0, 100_000,
+                                out_bytes=ob))
+    for i in range(6):
+        layers.append(LayerSpec(f"light{i}", "Linear", 0, 60_000,
+                                out_bytes=64 * 1024))
+    return ModelGraph("batchcurve-toy", layers)
+
+
+def batchcurve_cluster():
+    """Three nodes where per-item speed and batched capacity disagree:
+    one fast node with memory for the heavy stage at k=1 but not at
+    ``BC_K``, and two slower nodes with headroom."""
+    from repro.core.cluster import EdgeCluster
+    from repro.core.cost_model import NodeProfile
+    c = EdgeCluster()
+    c.add_node("turbo-lowmem", NodeProfile(cpu=1.0, mem_mb=24.0,
+                                           net_bw_mbps=8000.0))
+    c.add_node("std-0", NodeProfile(cpu=0.55, mem_mb=1024.0,
+                                    net_bw_mbps=8000.0))
+    c.add_node("std-1", NodeProfile(cpu=0.55, mem_mb=1024.0,
+                                    net_bw_mbps=8000.0))
+    return c
+
+
+def batchcurve_rows(num_requests: int = BC_REQUESTS):
+    """k=1 planner vs batch-aware planner on the identical micro-batched
+    open-loop stream, plus the calibrated-artifact comparison row. Fully
+    deterministic (analytic cost model + seeded arrivals + committed
+    artifact), so every field is guarded exactly."""
+    from repro.core.cost_model import CALIBRATION_ARTIFACT, BatchCostModel
+    from repro.core.planner import bottleneck_ms
+
+    g = batchcurve_graph()
+    rows = []
+    result = {}
+    for label, ek in (("planner-k1", 1), ("planner-batchaware", BC_K)):
+        cluster = batchcurve_cluster()
+        d = DistributedInference(cluster, ModelPartitioner(g),
+                                 method="planner", expected_k=ek)
+        cuts = [p.lo for p in d.plan.partitions] + [len(g.layers)]
+        pred_k1 = bottleneck_ms(g, d.plan.partitions, d.placement, cluster)
+        pred_kb = bottleneck_ms(g, d.plan.partitions, d.placement, cluster,
+                                expected_k=BC_K)
+        rep = d.run(num_requests, name=label,
+                    engine=EngineConfig(transfer="overlap",
+                                        micro_batch=BC_K,
+                                        adaptive_batch=True),
+                    arrivals=PoissonArrivals(rate_rps=BC_RATE_RPS,
+                                             seed=BC_SEED))
+        gp = rep.goodput_rps(BC_DEADLINE_MS)
+        result[label] = dict(cuts=cuts, placement=dict(d.placement),
+                             pred_kb=pred_kb, goodput=gp)
+        rows.append(dict(
+            config=label,
+            expected_k=ek,
+            cuts=cuts,
+            assignment=[d.placement[i] for i in range(len(cuts) - 1)],
+            predicted_bottleneck_k1_ms=round(pred_k1, 3),
+            predicted_bottleneck_k8_ms=round(pred_kb, 3),
+            goodput_rps=round(gp, 4),
+            p50_sojourn_ms=round(rep.p50_sojourn_ms, 2),
+            p99_sojourn_ms=round(rep.p99_sojourn_ms, 2),
+            peak_queue_depth=int(rep.queue_depth[1].max()),
+        ))
+    a, b = result["planner-k1"], result["planner-batchaware"]
+    assert a["cuts"] != b["cuts"] or a["placement"] != b["placement"], \
+        "the batch-aware planner must pick a different plan at k=8"
+    assert b["pred_kb"] < a["pred_kb"], (
+        "batch-aware plan must have the lower predicted bottleneck at the "
+        f"operating micro-batch: {b['pred_kb']:.2f} vs {a['pred_kb']:.2f}")
+    assert b["goodput"] > a["goodput"], (
+        "batch-aware plan must win on simulated open-loop goodput: "
+        f"{b['goodput']:.2f} vs {a['goodput']:.2f}")
+
+    # the committed kernel-calibration artifact vs the analytic fallback on
+    # the paper testbed (deterministic: reads only the in-repo JSON)
+    artifact = OUT_PATH.parent / CALIBRATION_ARTIFACT
+    model = BatchCostModel.from_artifact(artifact)
+    gm = mobilenetv2_graph()
+    cluster = make_paper_cluster()
+    d = DistributedInference(cluster, ModelPartitioner(gm), method="planner")
+    kw = dict(batch=1, calibration=d.partitioner.calibration,
+              speedup=d.deployer.speedup)
+    rows.append(dict(
+        config="calibrated-artifact-testbed",
+        source=model.source,
+        analytic_bottleneck_k4_ms=round(bottleneck_ms(
+            gm, d.plan.partitions, d.placement, cluster,
+            expected_k=4, **kw), 3),
+        calibrated_bottleneck_k4_ms=round(bottleneck_ms(
+            gm, d.plan.partitions, d.placement, cluster,
+            expected_k=4, batch_model=model, **kw), 3),
+    ))
+    return rows
+
+
 # --- multi-tenant serving -----------------------------------------------------
 
 #: the tenancy scale row: 3 tenants × 20 nodes × 10k open-loop requests
@@ -389,6 +519,7 @@ def run(scale_requests: int = 100_000, write: bool = True,
         table1=table1_rows(),
         modes=mode_rows(),
         openloop=openloop_rows(),
+        batchcurve=batchcurve_rows(),
         scale=scale_rows(scale_requests, budget_s=budget_s),
         multitenant=multitenant_rows(
             budget_s=MT_WALL_BUDGET_S if budget_s is not None else None),

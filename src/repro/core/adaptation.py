@@ -189,7 +189,8 @@ class AdaptationController:
         self.partitioner = pipeline.partitioner
         self.deployer = pipeline.deployer
         self.planner = PartitionPlanner(self.partitioner.graph,
-                                        self.cfg.planner)
+                                        self.cfg.planner,
+                                        batch_model=pipeline.batch_model)
         self.events: List[AdaptationEvent] = []
         self.migrations = 0
         self.decisions = 0
@@ -211,15 +212,37 @@ class AdaptationController:
         #: the engine run's static micro_batch — the base the relief
         #: doubles from (set by begin_stream at event-run start)
         self.stream_micro_batch = 1
+        #: whether the running stream forms batches adaptively
+        #: (``adaptive_k`` of queue depth) rather than always at the cap
+        self.stream_adaptive = False
+        #: last observed in-system backlog (engine poll ticks update this);
+        #: feeds :meth:`expected_k` for adaptive streams
+        self.last_queue_depth = 0
 
-    def begin_stream(self, micro_batch: int) -> None:
+    def begin_stream(self, micro_batch: int, adaptive: bool = False) -> None:
         """Engine hook at event-run start: remember the stream's static
         micro-batch cap (the base the overload relief doubles from) and
-        reset per-stream traffic state — rate observations and any raised
-        cap from a previous stream."""
+        batching mode, and reset per-stream traffic state — rate
+        observations, queue-depth signal, and any raised cap from a
+        previous stream."""
         self.stream_micro_batch = micro_batch
+        self.stream_adaptive = adaptive
         self.batch_cap = None
+        self.last_queue_depth = 0
         self.reset_rates()
+
+    def expected_k(self) -> int:
+        """The micro-batch size re-planning should cost stages at: the
+        effective cap (overload relief included) for fixed-k streams, or
+        ``adaptive_k`` of the last observed backlog when the stream forms
+        batches adaptively. This is the k the engine's batch formation
+        will actually run the candidate plan at — using it in the DP keeps
+        the planner's objective and the engine's behaviour in agreement."""
+        from repro.core.traffic import adaptive_k
+        cap = self.batch_cap or self.stream_micro_batch
+        if self.stream_adaptive:
+            return adaptive_k(self.last_queue_depth, cap)
+        return cap
 
     def observe_rates(self, offered_rps: float,
                       completed_rps: float) -> None:
@@ -287,7 +310,9 @@ class AdaptationController:
         return bottleneck_ms(self.partitioner.graph, partitions, assignment,
                              self.cluster, batch=self.pipeline.batch,
                              calibration=self.partitioner.calibration,
-                             speedup=self.deployer.speedup)
+                             speedup=self.deployer.speedup,
+                             expected_k=self.expected_k(),
+                             batch_model=self.pipeline.batch_model)
 
     def _predicted_migration_cost_ms(self, plan: PartitionPlan,
                                      assignment: List[str]) -> float:
@@ -315,7 +340,8 @@ class AdaptationController:
                                    calibration=self.partitioner.calibration,
                                    speedup=self.deployer.speedup,
                                    committed_ms=self.pipeline.committed_ms,
-                                   weight=self.pipeline.tenant.traffic.weight)
+                                   weight=self.pipeline.tenant.traffic.weight,
+                                   expected_k=self.expected_k())
         if result is None:
             return None, None
         return self.partitioner.plan_from_cuts(result.cuts), result.assignment
@@ -339,7 +365,8 @@ class AdaptationController:
             calibration=self.partitioner.calibration,
             speedup=self.deployer.speedup,
             committed_ms=self.pipeline.committed_ms,
-            weight=self.pipeline.tenant.traffic.weight)
+            weight=self.pipeline.tenant.traffic.weight,
+            expected_k=self.expected_k())
         if res is None or res.moved_stages == 0:
             return None, 0
         return res.assignment, res.moved_stages

@@ -15,10 +15,12 @@ prediction of the model.
 
 from __future__ import annotations
 
+import json
 import math
+import pathlib
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -160,10 +162,190 @@ def boundary_bytes(graph: ModelGraph, cut: int) -> int:
 
 
 def working_set_bytes(graph: ModelGraph, lo: int, hi: int, batch: int = 1) -> float:
-    """Params + peak activation for a partition (memory-pressure input)."""
+    """Params + peak activation for a partition (memory-pressure input).
+
+    The peak counts each layer's activation *and* its recurrent/KV state
+    (``state_bytes``): a resident SSD/RG-LRU scan state occupies memory at
+    execution time exactly like the activation does, and ``boundary_bytes``
+    already charges it at the wire — dropping it here made recurrent stages
+    underestimate memory pressure.
+    """
     params = partition_params_bytes(graph, lo, hi)
-    peak_act = max((l.out_bytes for l in graph.layers[lo:hi]), default=0)
+    peak_act = max((l.out_bytes + l.state_bytes for l in graph.layers[lo:hi]),
+                   default=0)
     return params + batch * peak_act
+
+
+# --- batch-aware cost model (calibrated exec_for(k) curves) ------------------
+
+#: default artifact path (repo-relative) for kernel-calibrated batch curves;
+#: written by ``scripts/calibrate_costmodel.py``, loaded explicitly via
+#: :meth:`BatchCostModel.from_artifact` — never implicitly, so the analytic
+#: default stays bit-for-bit reproducible
+CALIBRATION_ARTIFACT = pathlib.Path("artifacts/calibration/batch_curves.json")
+
+
+@dataclass(frozen=True)
+class KindCurve:
+    """Batch-scaling curve of one layer class: ``exec(k) = per_item * k *
+    per_item_scale * tail + overhead_ms`` (then memory pressure at the
+    k-scaled working set).
+
+    ``overhead_ms``: the fixed per-execution overhead a k-batch amortizes
+    (the analytic model's :data:`FIXED_OVERHEAD_MS`). ``per_item_scale``:
+    relative per-item throughput of this kind vs. the fleet anchor (> 1 =
+    this kind runs hotter than the paper-calibrated base throughput).
+    ``knee_k`` / ``tail_scale``: past ``knee_k`` coalesced items the kernel
+    leaves the overhead-amortizing regime and goes bandwidth-bound — per-item
+    time is multiplied by ``tail_scale`` (>= 1). ``knee_k = 0`` disables the
+    tail."""
+    overhead_ms: float = FIXED_OVERHEAD_MS
+    per_item_scale: float = 1.0
+    knee_k: float = 0.0
+    tail_scale: float = 1.0
+
+    def tail_factor(self, k: int) -> float:
+        """Bandwidth-tail multiplier on per-item time at batch ``k``."""
+        return self.tail_scale if self.knee_k and k > self.knee_k else 1.0
+
+
+#: the analytic fallback curve — exactly the scalar cost model's terms
+ANALYTIC_CURVE = KindCurve()
+
+
+class BatchCostModel:
+    """Batch-aware stage cost interface shared by the engine's
+    ``StageEntry.exec_for/xfer_for``, the planner's batch-aware bottleneck
+    objective, tenancy budgets, and adaptation gain predictions.
+
+    Without calibration curves (``is_analytic``) every method reduces to
+    the scalar cost model with k-scaled cost/bytes — the engine's original
+    micro-batch semantics, preserved bit-for-bit (callers keep their
+    literal k=1 expressions on the analytic path). With per-kind
+    :class:`KindCurve` entries (fit from the shipped jax/pallas kernel
+    microbenchmarks by ``scripts/calibrate_costmodel.py``), execution
+    curves gain measured overhead knees and bandwidth-bound tails while
+    the absolute throughput anchor stays the paper's Table-II calibration.
+    """
+
+    def __init__(self, curves: Optional[Dict[str, KindCurve]] = None,
+                 source: str = "analytic"):
+        self.curves: Dict[str, KindCurve] = dict(curves or {})
+        self.source = source
+
+    @property
+    def is_analytic(self) -> bool:
+        """True when no calibration artifact is loaded — the scalar-model
+        fallback whose results are pinned bit-for-bit by the parity
+        tests."""
+        return not self.curves
+
+    def curve_for(self, kind: str) -> KindCurve:
+        """The calibration curve of one layer class; the artifact's
+        ``default`` entry (or the analytic curve) for unknown kinds."""
+        c = self.curves.get(kind)
+        if c is None:
+            c = self.curves.get("default", ANALYTIC_CURVE)
+        return c
+
+    def partition_curve(self, graph: ModelGraph, lo: int,
+                        hi: int) -> KindCurve:
+        """Cost-weighted blend of the per-kind curves over layers
+        ``[lo, hi)`` — one effective curve per pipeline stage. Zero-cost
+        ranges fall back to the analytic curve."""
+        if self.is_analytic:
+            return ANALYTIC_CURVE
+        tot = o = s = kn = tl = 0.0
+        for l in graph.layers[lo:hi]:
+            w = l.cost
+            if w <= 0:
+                continue
+            c = self.curve_for(l.kind)
+            tot += w
+            o += w * c.overhead_ms
+            s += w * c.per_item_scale
+            kn += w * c.knee_k
+            tl += w * c.tail_scale
+        if tot <= 0:
+            return ANALYTIC_CURVE
+        return KindCurve(o / tot, s / tot, kn / tot, tl / tot)
+
+    def exec_ms(self, cost: float, profile: NodeProfile,
+                working_set: float = 0.0, k: int = 1,
+                curve: Optional[KindCurve] = None,
+                threads: float = 1.0) -> float:
+        """Execution time of a k-item micro-batch of ``cost`` per-item
+        units: k× the compute, one (curve-calibrated) fixed overhead,
+        memory pressure at the caller's (k-scaled) working set. The
+        analytic path is exactly ``execution_ms(cost * k, ...)``."""
+        if curve is None or curve is ANALYTIC_CURVE:
+            return execution_ms(cost * k, profile, working_set,
+                                threads=threads)
+        eff_cpu = min(profile.cpu, threads)
+        per_item = (cost / (BASE_THROUGHPUT * eff_cpu)
+                    * curve.per_item_scale * curve.tail_factor(k))
+        t = per_item * k + curve.overhead_ms
+        if working_set > profile.mem_bytes:
+            t *= (working_set / profile.mem_bytes) ** MEM_PRESSURE_ALPHA
+        return t
+
+    def xfer_ms(self, num_bytes: float, profile: NodeProfile,
+                k: int = 1) -> float:
+        """Transfer time of a k-request coalesced boundary message: one
+        per-message latency, k× the payload bytes."""
+        return transfer_ms(num_bytes * k, profile)
+
+    def amortized_stage_ms(self, cost: float, working_set: float,
+                           in_bytes: float, profile: NodeProfile,
+                           k: int = 1,
+                           curve: Optional[KindCurve] = None) -> float:
+        """Per-request steady-state stage period at operating micro-batch
+        ``k``: (batched execution + one coalesced incoming transfer) / k —
+        the batch-aware term the planner's bottleneck objective maximizes
+        over nodes. ``working_set`` must already be k-scaled; ``in_bytes``
+        is the per-request boundary payload (0 for the first stage)."""
+        t = self.exec_ms(cost, profile, working_set, k, curve)
+        if in_bytes > 0:
+            t += transfer_ms(in_bytes * k, profile)
+        return t / k if k != 1 else t
+
+    # --- artifact persistence ------------------------------------------------
+
+    @classmethod
+    def from_artifact(cls, path: Union[str, pathlib.Path, None] = None
+                      ) -> "BatchCostModel":
+        """Load a calibration artifact (``scripts/calibrate_costmodel.py``
+        output). A missing or unreadable artifact returns the analytic
+        fallback model instead of raising — calibration is an overlay, not
+        a dependency."""
+        p = pathlib.Path(path) if path is not None else CALIBRATION_ARTIFACT
+        try:
+            raw = json.loads(p.read_text())
+            curves = {kind: KindCurve(
+                overhead_ms=float(c["overhead_ms"]),
+                per_item_scale=float(c["per_item_scale"]),
+                knee_k=float(c.get("knee_k", 0.0)),
+                tail_scale=float(c.get("tail_scale", 1.0)))
+                for kind, c in raw["curves"].items()}
+        except (OSError, ValueError, KeyError, TypeError):
+            return cls(source="analytic-fallback")
+        return cls(curves, source=str(raw.get("source", p)))
+
+    def to_artifact_dict(self) -> dict:
+        """JSON-serializable artifact body (round-trips through
+        :meth:`from_artifact`)."""
+        return dict(
+            version=1, source=self.source,
+            curves={kind: dict(overhead_ms=c.overhead_ms,
+                               per_item_scale=c.per_item_scale,
+                               knee_k=c.knee_k, tail_scale=c.tail_scale)
+                    for kind, c in self.curves.items()})
+
+
+#: the shared analytic model instance — every batch-aware call site
+#: defaults to this, so "no artifact" means one object identity, not
+#: scattered None checks
+ANALYTIC_BATCH_MODEL = BatchCostModel()
 
 
 # --- TPU adaptation ----------------------------------------------------------

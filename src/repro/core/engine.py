@@ -164,7 +164,7 @@ class StageEntry:
     __slots__ = ("index", "node", "exec_ms", "xfer_ms", "out_bytes",
                  "recv_node", "key_prefix", "cache_value", "next_index",
                  "pending_execs", "queued", "_part", "_table", "_exec_k",
-                 "_xfer_k")
+                 "_xfer_k", "_curve")
 
     def __init__(self, table: "StageTable", part, node, recv_node):
         self.index = part.index
@@ -173,8 +173,19 @@ class StageEntry:
         self._part = part
         self._table = table
         ws = table.partitioner.working_set(part, table.batch)
-        self.exec_ms = execution_ms_cached(
-            part.cost * table.batch / table.speedup, node.profile, ws)
+        bm = table.batch_model
+        # blended calibration curve for this stage's layer span; None keeps
+        # the analytic fast path (and its exact float expressions) below
+        self._curve = (None if bm.is_analytic else
+                       bm.partition_curve(table.partitioner.graph,
+                                          part.lo, part.hi))
+        if self._curve is None:
+            self.exec_ms = execution_ms_cached(
+                part.cost * table.batch / table.speedup, node.profile, ws)
+        else:
+            self.exec_ms = bm.exec_ms(
+                part.cost * table.batch / table.speedup, node.profile, ws,
+                k=1, curve=self._curve)
         self.out_bytes = part.out_bytes * table.batch
         self.xfer_ms = (transfer_ms_cached(self.out_bytes, recv_node.profile)
                         if recv_node is not None else 0.0)
@@ -198,9 +209,14 @@ class StageEntry:
         if v is None:
             t = self._table
             ws = t.partitioner.working_set(self._part, t.batch * k)
-            v = execution_ms_cached(
-                self._part.cost * (t.batch * k) / t.speedup,
-                self.node.profile, ws)
+            if self._curve is None:
+                v = execution_ms_cached(
+                    self._part.cost * (t.batch * k) / t.speedup,
+                    self.node.profile, ws)
+            else:
+                v = t.batch_model.exec_ms(
+                    self._part.cost * t.batch / t.speedup,
+                    self.node.profile, ws, k=k, curve=self._curve)
             self._exec_k[k] = v
         return v
 
@@ -237,6 +253,7 @@ class StageTable:
         self.partitioner = pipeline.partitioner
         self.batch = pipeline.batch
         self.speedup = pipeline.deployer.speedup
+        self.batch_model = pipeline.batch_model
         nodes = pipeline.cluster.nodes
         parts = self.plan.partitions
         last = len(parts) - 1
@@ -655,7 +672,9 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
     multi = len(streams) > 1
     for s in streams:
         if s.controller is not None:
-            s.controller.begin_stream(kmax)   # fresh per-stream traffic state
+            # fresh per-stream traffic state; the adaptive flag lets the
+            # controller derive the expected micro-batch it re-plans at
+            s.controller.begin_stream(kmax, adaptive=adaptive)
     done_total = 0
     total_n = sum(s.n for s in streams)
     t0 = clock.now_ms
@@ -972,6 +991,11 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
                     s.engine._flush_sched()
                 s.qd_t.append(t)
                 s.qd_n.append(s.arrived - s.done)  # in system, admit q incl.
+                if s.controller is not None:
+                    # observed backlog feeds the controller's expected-k
+                    # estimate so re-planning costs stages at the batch
+                    # size the engine is actually coalescing
+                    s.controller.last_queue_depth = s.arrived - s.done
                 if s.arrivals is not None and s.controller is not None:
                     # arrival-rate vs completion-rate over the poll window:
                     # the open-loop overload signal (closed-loop streams

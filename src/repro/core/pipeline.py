@@ -34,7 +34,8 @@ from repro.core.adaptation import (AdaptationConfig, AdaptationController,
                                    ScenarioEvent, apply_scenario_event)
 from repro.core.cache import ResultCache, digest
 from repro.core.cluster import EdgeCluster
-from repro.core.cost_model import execution_ms, transfer_ms
+from repro.core.cost_model import (ANALYTIC_BATCH_MODEL, BatchCostModel,
+                                   execution_ms, transfer_ms)
 from repro.core.deployer import ModelDeployer
 from repro.core.monitor import ResourceMonitor
 from repro.core.partitioner import ModelPartitioner, PartitionPlan
@@ -328,7 +329,9 @@ class DistributedInference:
                  adaptation: Optional[AdaptationConfig] = None,
                  planner: Optional[PlannerConfig] = None,
                  tenant: Optional[Tenant] = None,
-                 committed_ms: Optional[Dict[str, float]] = None):
+                 committed_ms: Optional[Dict[str, float]] = None,
+                 expected_k: int = 1,
+                 batch_model: Optional[BatchCostModel] = None):
         self.cluster = cluster
         self.partitioner = partitioner
         # plan/placement ownership lives on the tenant (core.tenancy): a
@@ -343,6 +346,13 @@ class DistributedInference:
         self.cache = ResultCache() if use_cache else None
         self.executor = executor
         self.batch = batch
+        # batch-aware planning: the micro-batch size deploy-time planning
+        # costs stages at, and the (optionally calibrated) cost model shared
+        # by the planner, engine StageTable, and adaptation controller.
+        # The defaults (k=1, analytic) reproduce the k=1 planner bit-for-bit.
+        self.expected_k = max(int(expected_k), 1)
+        self.batch_model = (batch_model if batch_model is not None
+                            else ANALYTIC_BATCH_MODEL)
         self.committed_ms = committed_ms   # other tenants' node time budgets
         self._engine = None
         if planner is None:
@@ -361,12 +371,14 @@ class DistributedInference:
             # around the node time budgets earlier tenants already hold.
             assert assignment is None, \
                 "method='planner' chooses the assignment; don't pass one"
-            res = PartitionPlanner(partitioner.graph, self.planner_cfg).plan(
+            res = PartitionPlanner(partitioner.graph, self.planner_cfg,
+                                   batch_model=self.batch_model).plan(
                 node_views_from_cluster(cluster, self.scheduler),
                 batch=batch, calibration=partitioner.calibration,
                 speedup=self.deployer.speedup,
                 committed_ms=self.committed_ms,
-                weight=self.tenant.traffic.weight)
+                weight=self.tenant.traffic.weight,
+                expected_k=self.expected_k)
             if res is None:
                 raise RuntimeError("planner found no node with capacity")
             self.plan = partitioner.plan_from_cuts(res.cuts)
@@ -464,12 +476,14 @@ class DistributedInference:
         """
         if method == "planner":
             res = PartitionPlanner(self.partitioner.graph,
-                                   self.planner_cfg).plan(
+                                   self.planner_cfg,
+                                   batch_model=self.batch_model).plan(
                 node_views_from_cluster(self.cluster, self.scheduler),
                 batch=self.batch, calibration=self.partitioner.calibration,
                 speedup=self.deployer.speedup,
                 committed_ms=self.committed_ms,
-                weight=self.tenant.traffic.weight)
+                weight=self.tenant.traffic.weight,
+                expected_k=self.expected_k)
             if res is None:
                 raise RuntimeError("planner found no node with capacity")
             plan, assignment = self.partitioner.plan_from_cuts(res.cuts), \

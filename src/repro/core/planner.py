@@ -68,9 +68,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import (BASE_THROUGHPUT, FIXED_OVERHEAD_MS,
-                                   MEM_PRESSURE_ALPHA, NodeProfile,
-                                   execution_ms, partition_cost, transfer_ms,
+from repro.core.cost_model import (ANALYTIC_BATCH_MODEL, BASE_THROUGHPUT,
+                                   FIXED_OVERHEAD_MS, MEM_PRESSURE_ALPHA,
+                                   BatchCostModel, NodeProfile, execution_ms,
+                                   partition_cost, transfer_ms,
                                    working_set_bytes)
 from repro.core.partitioner import bottleneck_boundaries
 from repro.models.graph import ModelGraph
@@ -175,7 +176,8 @@ def _stage_ms(cost: float, ws: float, in_bytes: float,
 
 def bottleneck_ms(graph: ModelGraph, partitions, assignment: Dict[int, str],
                   cluster, batch: int = 1, calibration: float = 1.0,
-                  speedup: float = 1.0) -> float:
+                  speedup: float = 1.0, expected_k: int = 1,
+                  batch_model: Optional[BatchCostModel] = None) -> float:
     """Steady-state period of an arbitrary (partitions, placement) pair:
     max over nodes of that node's serialized stage time, each stage charged
     its execution plus its incoming boundary transfer.
@@ -185,17 +187,36 @@ def bottleneck_ms(graph: ModelGraph, partitions, assignment: Dict[int, str],
     candidate plans are always compared apples-to-apples. Any offline
     placement node makes the plan unservable (``inf``). This is the single
     objective the planner optimizes and the controller decides with.
+
+    ``expected_k``: the operating micro-batch the engine coalesces at —
+    stages are charged their *per-request amortized* batched time
+    (``BatchCostModel.amortized_stage_ms``: k× compute + one overhead +
+    one coalesced transfer, all over k, with memory pressure at the
+    k-scaled working set). ``expected_k=1`` with the analytic model (no
+    calibration artifact) reproduces the original k=1 objective
+    bit-for-bit.
     """
     scale = calibration * batch / speedup
+    model = batch_model if batch_model is not None else ANALYTIC_BATCH_MODEL
+    k = max(int(expected_k), 1)
+    plain = k == 1 and model.is_analytic
     per_node: Dict[str, float] = {}
     for part in partitions:
         node = cluster.nodes[assignment[part.index]]
         if not node.online:
             return math.inf
-        t = _stage_ms(partition_cost(graph, part.lo, part.hi) * scale,
-                      working_set_bytes(graph, part.lo, part.hi, batch),
-                      part.in_bytes * batch if part.lo > 0 else 0.0,
-                      node.profile)
+        if plain:
+            t = _stage_ms(partition_cost(graph, part.lo, part.hi) * scale,
+                          working_set_bytes(graph, part.lo, part.hi, batch),
+                          part.in_bytes * batch if part.lo > 0 else 0.0,
+                          node.profile)
+        else:
+            t = model.amortized_stage_ms(
+                partition_cost(graph, part.lo, part.hi) * scale,
+                working_set_bytes(graph, part.lo, part.hi, batch * k),
+                part.in_bytes * batch if part.lo > 0 else 0.0,
+                node.profile, k,
+                model.partition_curve(graph, part.lo, part.hi))
         per_node[node.node_id] = per_node.get(node.node_id, 0.0) + t
     return max(per_node.values()) if per_node else math.inf
 
@@ -212,9 +233,12 @@ class PartitionPlanner:
     """
 
     def __init__(self, graph: ModelGraph,
-                 config: Optional[PlannerConfig] = None):
+                 config: Optional[PlannerConfig] = None,
+                 batch_model: Optional[BatchCostModel] = None):
         self.graph = graph
         self.cfg = config or PlannerConfig()
+        self.batch_model = (batch_model if batch_model is not None
+                            else ANALYTIC_BATCH_MODEL)
         L = len(graph.layers)
         costs = np.array([l.cost for l in graph.layers], dtype=np.float64)
         prefix = np.concatenate([[0.0], np.cumsum(costs)])
@@ -223,8 +247,10 @@ class PartitionPlanner:
         pparams = np.concatenate(
             [[0.0], np.cumsum([4.0 * l.params for l in graph.layers])])
         self._params_mat = pparams[None, :] - pparams[:, None]
-        out_b = np.array([l.out_bytes for l in graph.layers], dtype=np.float64)
-        # peak activation over [a, b): running max from each start a
+        # peak resident bytes over [a, b): activation + recurrent/KV state
+        # (running max from each start a) — mirrors working_set_bytes
+        out_b = np.array([l.out_bytes + l.state_bytes
+                          for l in graph.layers], dtype=np.float64)
         peak = np.zeros((L + 1, L + 1))
         for a in range(L):
             peak[a, a + 1:] = np.maximum.accumulate(out_b[a:])
@@ -235,29 +261,73 @@ class PartitionPlanner:
             + [0.0])
         self._empty_mask = np.tril(np.ones((L + 1, L + 1), dtype=bool))
         self._L = L
+        self._curve_mats = None   # lazy blended calibration matrices
+
+    def _curve_matrices(self):
+        """(O, S, KN, TL) matrices of the cost-weighted blended calibration
+        curve per layer range [a, b) — ``BatchCostModel.partition_curve``
+        vectorized over every range. Lazy: only calibrated models pay the
+        O(L^2) build, and only once per planner instance."""
+        if self._curve_mats is None:
+            sc = self._stage_cost
+            safe = np.where(sc > 0, sc, 1.0)
+            mats = []
+            for attr, default in (("overhead_ms", FIXED_OVERHEAD_MS),
+                                  ("per_item_scale", 1.0),
+                                  ("knee_k", 0.0), ("tail_scale", 1.0)):
+                w = np.concatenate([[0.0], np.cumsum(
+                    [l.cost * getattr(self.batch_model.curve_for(l.kind), attr)
+                     for l in self.graph.layers])])
+                blend = (w[None, :] - w[:, None]) / safe
+                mats.append(np.where(sc > 0, blend, default))
+            self._curve_mats = tuple(mats)
+        return self._curve_mats
 
     # --- per-(call, node) stage-time matrices --------------------------------
 
-    def _time_matrix(self, view: NodeView, batch: int,
-                     scale: float) -> np.ndarray:
+    def _time_matrix(self, view: NodeView, batch: int, scale: float,
+                     expected_k: int = 1) -> np.ndarray:
         """t[a, b] = stage period of layers [a, b) on this node, inf for
         b <= a. Vectorized mirror of ``_stage_ms`` (test_planner pins the
-        two against each other so they cannot drift apart)."""
+        two against each other so they cannot drift apart).
+
+        ``expected_k`` > 1 (or a calibrated ``batch_model``) switches to
+        the per-request *amortized* batched period — the vectorized mirror
+        of ``BatchCostModel.amortized_stage_ms``: k× compute + one
+        (calibrated) overhead + one coalesced incoming transfer, divided
+        by k, with memory pressure at the k-scaled working set. The DP
+        objective stays "max per-node serialized ms/request", so committed
+        budgets and tenancy weights compose unchanged."""
         prof = view.profile
-        t = (self._stage_cost * scale
-             / (BASE_THROUGHPUT * min(prof.cpu, 1.0)) + FIXED_OVERHEAD_MS)
-        ws = self._params_mat + batch * self._peak_act
+        k = max(int(expected_k), 1)
+        if k == 1 and self.batch_model.is_analytic:
+            t = (self._stage_cost * scale
+                 / (BASE_THROUGHPUT * min(prof.cpu, 1.0)) + FIXED_OVERHEAD_MS)
+            ws = self._params_mat + batch * self._peak_act
+        else:
+            per_item = (self._stage_cost * scale
+                        / (BASE_THROUGHPUT * min(prof.cpu, 1.0)))
+            if self.batch_model.is_analytic:
+                t = per_item * k + FIXED_OVERHEAD_MS
+            else:
+                o_mat, s_mat, kn_mat, tl_mat = self._curve_matrices()
+                per_item = per_item * s_mat * np.where(
+                    (kn_mat > 0) & (k > kn_mat), tl_mat, 1.0)
+                t = per_item * k + o_mat
+            ws = self._params_mat + (batch * k) * self._peak_act
         over = ws > prof.mem_bytes
         if over.any():
             # exponentiate only where over-limit (elsewhere ws can be the
             # meaningless negative of an empty b < a range)
             pressure = np.where(over, ws / prof.mem_bytes, 1.0)
             t = t * pressure ** MEM_PRESSURE_ALPHA
-        in_b = self._in_bytes * batch
+        in_b = self._in_bytes * (batch * k)
         xfer = np.where(in_b > 0,
                         prof.net_latency_ms
                         + in_b * 8.0 / (prof.net_bw_mbps * 1e3), 0.0)
         t = t + xfer[:, None]
+        if k != 1:
+            t = t / k
         return np.where(self._empty_mask, np.inf, t)
 
     # --- DP over one node order ----------------------------------------------
@@ -329,7 +399,7 @@ class PartitionPlanner:
              calibration: float = 1.0, speedup: float = 1.0,
              mode: Optional[str] = None,
              committed_ms: Optional[Dict[str, float]] = None,
-             weight: float = 1.0) -> Optional[PlanResult]:
+             weight: float = 1.0, expected_k: int = 1) -> Optional[PlanResult]:
         """Solve (cuts, assignment) for the given live nodes.
 
         Args:
@@ -344,6 +414,12 @@ class PartitionPlanner:
             weight: this tenant's relative traffic weight; scales its own
                 stage times so tenants of different offered load compare
                 in the same utilization units.
+            expected_k: the operating micro-batch the engine is expected
+                to coalesce at (queue-depth-driven ``traffic.adaptive_k``
+                or the static engine cap) — the search co-designs cuts
+                with the batch, costing stages at their per-request
+                amortized batched time. 1 (with the analytic batch model)
+                reproduces the original k=1 objective bit-for-bit.
         Returns:
             ``PlanResult`` with node ids filled in, or None when no node has
             capacity.
@@ -368,7 +444,8 @@ class PartitionPlanner:
             # which the controller would misread as "no capacity")
             max_stages = min(max_stages, n)
         scale = calibration * batch / speedup
-        tmats = [self._time_matrix(v, batch, scale) for v in views]
+        tmats = [self._time_matrix(v, batch, scale, expected_k)
+                 for v in views]
         if weight != 1.0:
             tmats = [m * weight for m in tmats]
         caps = [v.capability for v in views]
@@ -600,7 +677,8 @@ class PartitionPlanner:
                      batch: int = 1, calibration: float = 1.0,
                      speedup: float = 1.0,
                      committed_ms: Optional[Dict[str, float]] = None,
-                     weight: float = 1.0) -> Optional[PlanResult]:
+                     weight: float = 1.0,
+                     expected_k: int = 1) -> Optional[PlanResult]:
         """Partial migration: keep the cut list fixed, move **at most**
         ``max_moves`` stages to new nodes (greedy best-move descent on the
         bottleneck). The candidate's migration cost is only the moved
@@ -615,7 +693,8 @@ class PartitionPlanner:
         if not views:
             return None
         scale = calibration * batch / speedup
-        tmats = [self._time_matrix(v, batch, scale) for v in views]
+        tmats = [self._time_matrix(v, batch, scale, expected_k)
+                 for v in views]
         if weight != 1.0:
             tmats = [m * weight for m in tmats]
         committed, floor = self._committed_vector(views, committed_ms)
@@ -666,22 +745,38 @@ class PartitionPlanner:
     def stage_loads(self, cuts: Sequence[int], assignment: Sequence[str],
                     views: Sequence[NodeView], batch: int = 1,
                     calibration: float = 1.0, speedup: float = 1.0,
-                    weight: float = 1.0) -> Dict[str, float]:
+                    weight: float = 1.0,
+                    expected_k: int = 1) -> Dict[str, float]:
         """Per-node time (ms/request, traffic-weighted) one plan charges:
         the committed budget its tenant contributes to every other
-        tenant's search. Uses the scalar ``_stage_ms`` evaluator, so the
-        budget and the planner's own objective cannot drift apart."""
+        tenant's search. Uses the scalar ``_stage_ms`` evaluator (the
+        batch-aware ``amortized_stage_ms`` when ``expected_k`` > 1 or a
+        calibration artifact is loaded), so the budget and the planner's
+        own objective cannot drift apart."""
         scale = calibration * batch / speedup
+        k = max(int(expected_k), 1)
+        plain = k == 1 and self.batch_model.is_analytic
         view_by = {v.node_id: v for v in views}
         out: Dict[str, float] = {}
         for i in range(len(cuts) - 1):
             lo, hi = cuts[i], cuts[i + 1]
             v = view_by[assignment[i]]
-            ms = _stage_ms(
-                float(self._stage_cost[lo, hi]) * scale,
-                float(self._params_mat[lo, hi] + batch * self._peak_act[lo, hi]),
-                float(self._in_bytes[lo]) * batch if lo > 0 else 0.0,
-                v.profile) * weight
+            if plain:
+                ms = _stage_ms(
+                    float(self._stage_cost[lo, hi]) * scale,
+                    float(self._params_mat[lo, hi]
+                          + batch * self._peak_act[lo, hi]),
+                    float(self._in_bytes[lo]) * batch if lo > 0 else 0.0,
+                    v.profile) * weight
+            else:
+                ms = self.batch_model.amortized_stage_ms(
+                    float(self._stage_cost[lo, hi]) * scale,
+                    float(self._params_mat[lo, hi]
+                          + (batch * k) * self._peak_act[lo, hi]),
+                    float(self._in_bytes[lo]) * batch if lo > 0 else 0.0,
+                    v.profile, k,
+                    self.batch_model.partition_curve(self.graph, lo, hi)
+                ) * weight
             out[v.node_id] = out.get(v.node_id, 0.0) + ms
         return out
 
@@ -745,6 +840,7 @@ class TenantPlanSpec:
     calibration: float = 1.0
     speedup: float = 1.0
     weight: float = 1.0
+    expected_k: int = 1
 
 
 def plan_tenants(specs: Sequence[TenantPlanSpec], views: Sequence[NodeView],
@@ -776,7 +872,8 @@ def plan_tenants(specs: Sequence[TenantPlanSpec], views: Sequence[NodeView],
             res = spec.planner.plan(
                 views, batch=spec.batch, calibration=spec.calibration,
                 speedup=spec.speedup, mode=mode,
-                committed_ms=committed or None, weight=spec.weight)
+                committed_ms=committed or None, weight=spec.weight,
+                expected_k=spec.expected_k)
             if res is None:
                 return None
             prev = results.get(spec.name)
@@ -787,7 +884,7 @@ def plan_tenants(specs: Sequence[TenantPlanSpec], views: Sequence[NodeView],
             loads[spec.name] = spec.planner.stage_loads(
                 res.cuts, res.assignment, views, batch=spec.batch,
                 calibration=spec.calibration, speedup=spec.speedup,
-                weight=spec.weight)
+                weight=spec.weight, expected_k=spec.expected_k)
         if not changed:
             break
     return results

@@ -117,7 +117,7 @@ class TaskScheduler:
             if n.net_latency_ms > self.latency_threshold_ms:
                 out.append(NodeScore(n.node_id, 0, 0, 0, 0, 0, skipped="high-latency"))
                 continue
-            if n.cpu_avail <= 0 or n.mem_avail_mb < req.mem_mb:
+            if n.cpu_avail < req.cpu or n.mem_avail_mb < req.mem_mb:
                 out.append(NodeScore(n.node_id, 0, 0, 0, 0, 0,
                                      skipped="insufficient-resources"))
                 continue

@@ -100,29 +100,47 @@ class Tenant:
         stages charge each node (execution plus incoming boundary
         transfer, at the current calibration) — the per-node time budget
         the multi-tenant planner treats as committed load. ``weighted``
-        scales by the tenant's relative traffic weight. Memoized on
-        (plan, placement, calibration) identity — the engine refreshes
-        budgets at every poll tick, and they only move on migration or
-        recalibration."""
+        scales by the tenant's relative traffic weight. Batch-aware: when
+        the pipeline's controller expects micro-batches of k > 1 (or a
+        calibration artifact is loaded), the budget is the amortized
+        per-request time at that k — the same numbers the planner's
+        objective and the engine's ``exec_for(k)`` use. Memoized on
+        (plan, placement, calibration, k) identity — the engine refreshes
+        budgets at every poll tick, and they only move on migration,
+        recalibration, or a batch-regime change."""
         p = self.pipeline
         assert p is not None, "tenant not attached to a pipeline"
+        k = (p.controller.expected_k() if p.controller is not None
+             else p.expected_k)
+        k = max(int(k), 1)
+        model = p.batch_model
         key = (self.plan, tuple(sorted(self.placement.items())),
                tuple(p.cluster.nodes[nid].profile
                      for nid in self.placement.values()),
-               p.partitioner.calibration, weighted)
+               p.partitioner.calibration, weighted, k, id(model))
         if self._budget_cache is not None and self._budget_cache[0] == key:
             return self._budget_cache[1]
         graph = p.partitioner.graph
         scale = (p.partitioner.calibration * p.batch / p.deployer.speedup)
         w = self.traffic.weight if weighted else 1.0
+        plain = k == 1 and model.is_analytic
         out: Dict[str, float] = {}
         for part in self.plan.partitions:
             node = p.cluster.nodes[self.placement[part.index]]
-            ws = p.partitioner.working_set(part, p.batch)
-            t = execution_ms(partition_cost(graph, part.lo, part.hi) * scale,
-                             node.profile, ws)
-            if part.lo > 0:
-                t += transfer_ms(part.in_bytes * p.batch, node.profile)
+            if plain:
+                ws = p.partitioner.working_set(part, p.batch)
+                t = execution_ms(
+                    partition_cost(graph, part.lo, part.hi) * scale,
+                    node.profile, ws)
+                if part.lo > 0:
+                    t += transfer_ms(part.in_bytes * p.batch, node.profile)
+            else:
+                t = model.amortized_stage_ms(
+                    partition_cost(graph, part.lo, part.hi) * scale,
+                    p.partitioner.working_set(part, p.batch * k),
+                    part.in_bytes * p.batch if part.lo > 0 else 0.0,
+                    node.profile, k,
+                    model.partition_curve(graph, part.lo, part.hi))
             out[node.node_id] = out.get(node.node_id, 0.0) + t * w
         self._budget_cache = (key, out)
         return out

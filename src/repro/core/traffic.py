@@ -204,6 +204,12 @@ class TraceArrivals(ArrivalProcess):
             return offs[:n].copy()
         span = float(offs[-1])
         gap = span / (len(offs) - 1) if len(offs) > 1 else 1.0
+        if gap <= 0.0:
+            # zero-span trace (all timestamps identical): the mean gap is
+            # 0, which would replay every repetition at the same instant —
+            # the double-arrival this shift exists to avoid. Fall back to
+            # a positive 1 ms gap between repetitions.
+            gap = 1.0
         reps = -(-n // len(offs))            # ceil division
         shifts = np.arange(reps, dtype=np.float64) * (span + gap)
         return (offs[None, :] + shifts[:, None]).reshape(-1)[:n]

@@ -1,0 +1,192 @@
+"""Batch-aware cost model (``BatchCostModel`` / ``KindCurve``): analytic
+parity, amortization/monotonicity properties, calibrated-curve semantics,
+and artifact round-trip."""
+
+import json
+
+import pytest
+from conftest import given, settings, st
+
+from repro.core.cost_model import (ANALYTIC_BATCH_MODEL, ANALYTIC_CURVE,
+                                   FIXED_OVERHEAD_MS, BatchCostModel,
+                                   KindCurve, NodeProfile, execution_ms,
+                                   transfer_ms, working_set_bytes)
+from repro.models.graph import LayerSpec, ModelGraph
+
+PROF = NodeProfile(cpu=1.0, mem_mb=1024.0)
+SMALL = NodeProfile(cpu=1.0, mem_mb=8.0)
+
+
+def _graph():
+    return ModelGraph("cm-toy", [
+        LayerSpec("a", "Conv2d", 100, 1_000.0, out_bytes=4096),
+        LayerSpec("b", "Attention", 200, 3_000.0, out_bytes=4096,
+                  state_bytes=2048),
+        LayerSpec("c", "Linear", 300, 2_000.0, out_bytes=1024),
+    ])
+
+
+# --- analytic parity ---------------------------------------------------------
+
+def test_analytic_exec_k1_is_exact_scalar_model():
+    """Bit-for-bit: the analytic model at k=1 IS execution_ms."""
+    for cost, ws in ((0.0, 0.0), (5e5, 0.0), (5e5, 2e9)):
+        assert (ANALYTIC_BATCH_MODEL.exec_ms(cost, PROF, ws, k=1)
+                == execution_ms(cost, PROF, ws))
+
+
+def test_analytic_exec_k_is_scalar_model_of_k_scaled_cost():
+    """The analytic k>1 path is exactly execution_ms(cost * k) — the
+    engine's original micro-batch semantics."""
+    assert (ANALYTIC_BATCH_MODEL.exec_ms(7e5, PROF, 0.0, k=4)
+            == execution_ms(7e5 * 4, PROF, 0.0))
+
+
+def test_analytic_amortized_stage_k1_is_exec_plus_transfer():
+    t = ANALYTIC_BATCH_MODEL.amortized_stage_ms(5e5, 0.0, 4096, PROF, 1)
+    assert t == execution_ms(5e5, PROF) + transfer_ms(4096, PROF)
+
+
+def test_is_analytic_flags():
+    assert ANALYTIC_BATCH_MODEL.is_analytic
+    assert not BatchCostModel({"Linear": KindCurve()}).is_analytic
+
+
+@given(cost=st.floats(1e3, 1e8), k=st.integers(2, 32))
+@settings(max_examples=60, deadline=None)
+def test_amortization_property(cost, k):
+    """exec(k) < k * exec(1) (one fixed overhead for k items) and
+    exec(k) > exec(1) (more work takes longer), pressure-free."""
+    m = ANALYTIC_BATCH_MODEL
+    e1, ek = m.exec_ms(cost, PROF, k=1), m.exec_ms(cost, PROF, k=k)
+    assert e1 < ek < k * e1
+
+
+@given(cost=st.floats(1e3, 1e8))
+@settings(max_examples=40, deadline=None)
+def test_monotone_in_k(cost):
+    m = ANALYTIC_BATCH_MODEL
+    ts = [m.exec_ms(cost, PROF, k=k) for k in (1, 2, 4, 8, 16)]
+    assert all(a < b for a, b in zip(ts, ts[1:]))
+
+
+# --- calibrated curves -------------------------------------------------------
+
+def test_calibrated_curve_overhead_and_scale():
+    """exec(k) = per_item * scale * k + overhead under a custom curve."""
+    curve = KindCurve(overhead_ms=5.0, per_item_scale=2.0)
+    m = BatchCostModel({"Linear": curve})
+    cost = 6e5
+    from repro.core.cost_model import BASE_THROUGHPUT
+    per_item = cost / BASE_THROUGHPUT * 2.0
+    for k in (1, 3, 8):
+        assert m.exec_ms(cost, PROF, k=k, curve=curve) == pytest.approx(
+            per_item * k + 5.0)
+
+
+def test_bandwidth_tail_kicks_in_past_knee():
+    """knee_k/tail_scale: per-item time is tail-scaled only past the
+    knee, so the per-request amortization curve flattens then rises."""
+    curve = KindCurve(knee_k=4.0, tail_scale=1.5)
+    m = BatchCostModel({"Linear": curve})
+    cost = 6e5
+    at = lambda k: m.exec_ms(cost, PROF, k=k, curve=curve)
+    assert curve.tail_factor(4) == 1.0
+    assert curve.tail_factor(5) == 1.5
+    # past the knee, per-item cost jumps by the tail scale
+    assert at(5) > at(4) * (5 / 4) * 1.2
+
+
+def test_memory_pressure_knee_at_scaled_working_set():
+    """The same working-set pressure model applies: a ws over the node
+    limit (as a k-scaled batch produces) superlinearly slows the stage."""
+    m = ANALYTIC_BATCH_MODEL
+    under = m.exec_ms(1e5, SMALL, working_set=4 * 1024 * 1024, k=4)
+    over = m.exec_ms(1e5, SMALL, working_set=32 * 1024 * 1024, k=4)
+    assert over > under * 5.0
+
+
+def test_partition_curve_blends_by_cost():
+    g = _graph()
+    curves = {"Conv2d": KindCurve(overhead_ms=1.0),
+              "Attention": KindCurve(overhead_ms=4.0),
+              "Linear": KindCurve(overhead_ms=2.0)}
+    m = BatchCostModel(curves)
+    blend = m.partition_curve(g, 0, 3)
+    want = (1_000 * 1.0 + 3_000 * 4.0 + 2_000 * 2.0) / 6_000
+    assert blend.overhead_ms == pytest.approx(want)
+    # single-layer span is that layer's curve verbatim
+    assert m.partition_curve(g, 1, 2).overhead_ms == pytest.approx(4.0)
+
+
+def test_partition_curve_falls_back_analytic():
+    m = BatchCostModel({"Linear": KindCurve(overhead_ms=9.0)})
+    empty = ModelGraph("z", [LayerSpec("n", "Linear", 0, 0.0)])
+    assert m.partition_curve(empty, 0, 1) is ANALYTIC_CURVE
+    assert ANALYTIC_BATCH_MODEL.partition_curve(_graph(), 0, 3) \
+        is ANALYTIC_CURVE
+
+
+def test_curve_for_unknown_kind_uses_default_then_analytic():
+    m = BatchCostModel({"Linear": KindCurve(overhead_ms=9.0),
+                        "default": KindCurve(overhead_ms=3.0)})
+    assert m.curve_for("Linear").overhead_ms == 9.0
+    assert m.curve_for("NoSuchKind").overhead_ms == 3.0
+    m2 = BatchCostModel({"Linear": KindCurve(overhead_ms=9.0)})
+    assert m2.curve_for("NoSuchKind") is ANALYTIC_CURVE
+
+
+def test_xfer_ms_coalesces_payload():
+    m = ANALYTIC_BATCH_MODEL
+    assert m.xfer_ms(4096, PROF, k=1) == transfer_ms(4096, PROF)
+    lat = PROF.net_latency_ms
+    assert m.xfer_ms(4096, PROF, k=4) == pytest.approx(
+        4 * (transfer_ms(4096, PROF) - lat) + lat)
+
+
+# --- artifact persistence ----------------------------------------------------
+
+def test_artifact_round_trip(tmp_path):
+    m = BatchCostModel({"Attention": KindCurve(1.5, 1.2, 4.0, 1.3),
+                        "default": KindCurve()}, source="unit-test")
+    p = tmp_path / "curves.json"
+    p.write_text(json.dumps(m.to_artifact_dict()))
+    m2 = BatchCostModel.from_artifact(p)
+    assert m2.source == "unit-test"
+    assert m2.curves == m.curves
+
+
+def test_missing_artifact_falls_back_analytic(tmp_path):
+    m = BatchCostModel.from_artifact(tmp_path / "nope.json")
+    assert m.is_analytic
+    assert m.source == "analytic-fallback"
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert BatchCostModel.from_artifact(bad).is_analytic
+
+
+def test_committed_artifact_loads():
+    """The in-repo calibration artifact must parse into curves (the bench's
+    calibrated row depends on it)."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    m = BatchCostModel.from_artifact(
+        root / "artifacts" / "calibration" / "batch_curves.json")
+    assert not m.is_analytic
+    assert "Attention" in m.curves and "default" in m.curves
+    for c in m.curves.values():
+        assert c.overhead_ms >= 0.0 and c.per_item_scale > 0.0
+        assert c.tail_scale >= 1.0
+
+
+# --- working-set satellite fix ----------------------------------------------
+
+def test_working_set_counts_recurrent_state():
+    """Peak activation includes ``state_bytes`` (recurrent/KV state is
+    resident at execution time, and boundary_bytes already ships it)."""
+    g = _graph()
+    params = 4 * (100 + 200 + 300)
+    assert working_set_bytes(g, 0, 3, batch=1) == params + (4096 + 2048)
+    assert working_set_bytes(g, 0, 3, batch=3) == params + 3 * (4096 + 2048)
+    # state-free spans are unchanged
+    assert working_set_bytes(g, 2, 3, batch=2) == 4 * 300 + 2 * 1024

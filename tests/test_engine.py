@@ -191,6 +191,51 @@ def test_microbatch_amortizes_fixed_overhead(graph):
     assert x4 == pytest.approx(4 * (x1 - lat) + lat)
 
 
+def test_exec_for_matches_batch_cost_model(graph):
+    """StageEntry.exec_for/xfer_for agree element-wise with the shared
+    ``BatchCostModel`` — the same numbers the batch-aware planner
+    objective uses, so engine and planner cannot disagree."""
+    d = _fresh(graph, num_partitions=3)
+    engine = PipelineEngine(d)
+    table = engine._current_table()
+    for st in table.stages:
+        part = st._part
+        for k in (1, 2, 4, 8):
+            ws = d.partitioner.working_set(part, k)
+            want = d.batch_model.exec_ms(
+                part.cost * table.batch / table.speedup,
+                st.node.profile, ws, k=k)
+            assert st.exec_for(k) == pytest.approx(want, rel=1e-12)
+            if st.recv_node is not None:
+                assert st.xfer_for(k) == pytest.approx(
+                    d.batch_model.xfer_ms(st.out_bytes, st.recv_node.profile,
+                                          k=k), rel=1e-12)
+
+
+def test_exec_for_calibrated_curves(graph):
+    """With a calibration artifact attached, exec_for(k) follows the
+    blended per-stage KindCurve (overhead + per-item scale), not the
+    analytic constants — and exec_for(1) is the table's exec_ms."""
+    from repro.core.cost_model import BatchCostModel, KindCurve
+    m = BatchCostModel({"default": KindCurve(overhead_ms=6.0,
+                                             per_item_scale=1.5)},
+                       source="unit-test")
+    d = _fresh(graph, num_partitions=3, batch_model=m)
+    table = PipelineEngine(d)._current_table()
+    assert table.batch_model is m
+    for st in table.stages:
+        part = st._part
+        curve = m.partition_curve(graph, part.lo, part.hi)
+        assert st.exec_for(1) == st.exec_ms
+        for k in (1, 4):
+            ws = d.partitioner.working_set(part, k)
+            want = m.exec_ms(part.cost * table.batch / table.speedup,
+                             st.node.profile, ws, k=k, curve=curve)
+            assert st.exec_for(k) == pytest.approx(want, rel=1e-12)
+        # amortization still holds under the calibrated curve
+        assert st.exec_for(4) < 4 * st.exec_for(1)
+
+
 def test_event_mode_cache_serves_hits(graph):
     d = _fresh(graph, use_cache=True)
     rep = d.run(120, repeat_rate=0.8,

@@ -466,3 +466,128 @@ def test_plan_tenants_respects_weights():
     light_on_bottleneck = [nid for nid in joint["light"].assignment
                            if nid == heavy_bottleneck]
     assert len(light_on_bottleneck) <= 1
+
+
+# --- batch-aware planning (expected_k + BatchCostModel) ----------------------
+
+def batchy_graph():
+    """Front half: heavy compute with large activations; back half light —
+    the k=1-optimal and batch-aware-optimal plans disagree (the bench's
+    ``batchcurve`` scenario, miniaturized)."""
+    layers = []
+    for i in range(6):
+        ob = 8 * 1024 * 1024 if i < 5 else 64 * 1024
+        layers.append(LayerSpec(f"heavy{i}", "Conv2d", 0, 100_000.0,
+                                out_bytes=ob))
+    for i in range(6):
+        layers.append(LayerSpec(f"light{i}", "Linear", 0, 60_000.0,
+                                out_bytes=64 * 1024))
+    return ModelGraph("batchy", layers)
+
+
+def batchy_views():
+    return [NodeView("turbo-lowmem",
+                     NodeProfile(cpu=1.0, mem_mb=24.0, net_bw_mbps=8000.0),
+                     1.0),
+            NodeView("std-0",
+                     NodeProfile(cpu=0.55, mem_mb=1024.0,
+                                 net_bw_mbps=8000.0), 0.55),
+            NodeView("std-1",
+                     NodeProfile(cpu=0.55, mem_mb=1024.0,
+                                 net_bw_mbps=8000.0), 0.55)]
+
+
+def test_expected_k1_is_bit_identical_to_default():
+    """Parity pin: expected_k=1 with the analytic model changes nothing —
+    same cuts, same assignment, same bottleneck float."""
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = node_views_from_cluster(make_paper_cluster())
+    base = planner.plan(views, mode="dp")
+    pinned = planner.plan(views, mode="dp", expected_k=1)
+    assert base.cuts == pinned.cuts
+    assert base.assignment == pinned.assignment
+    assert base.bottleneck_ms == pinned.bottleneck_ms
+
+
+def test_batch_aware_time_matrix_matches_amortized_model():
+    """_time_matrix(expected_k=k) must agree with the scalar
+    ``BatchCostModel.amortized_stage_ms`` exactly (same discipline as the
+    k=1 pin against execution_ms)."""
+    from repro.core.cost_model import (ANALYTIC_BATCH_MODEL, boundary_bytes,
+                                       partition_cost, working_set_bytes)
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    prof = NodeProfile(cpu=0.6, mem_mb=48, net_latency_ms=3.0)
+    view = NodeView("x", prof, 0.6)
+    k = 6
+    t = planner._time_matrix(view, batch=2, scale=1.7, expected_k=k)
+    for a, b in [(0, 141), (0, 17), (30, 90), (118, 141), (70, 71)]:
+        expect = ANALYTIC_BATCH_MODEL.amortized_stage_ms(
+            partition_cost(g, a, b) * 1.7,
+            working_set_bytes(g, a, b, 2 * k),
+            boundary_bytes(g, a) * 2 if a > 0 else 0.0,
+            prof, k)
+        assert float(t[a, b]) == pytest.approx(expect, rel=1e-12)
+
+
+def test_batch_aware_planner_avoids_memory_knee():
+    """At the operating micro-batch the k-scaled working set crosses the
+    fast node's memory: the batch-aware plan must differ from the k=1
+    plan and win the amortized bottleneck at that k."""
+    g = batchy_graph()
+    planner = PartitionPlanner(g)
+    views = batchy_views()
+    plan_k1 = planner.plan(views, mode="dp")
+    plan_k8 = planner.plan(views, mode="dp", expected_k=8)
+    assert (plan_k1.cuts != plan_k8.cuts
+            or plan_k1.assignment != plan_k8.assignment)
+    # evaluate both plans under the SAME k=8 objective
+    t8 = {v.node_id: planner._time_matrix(v, 1, 1.0, expected_k=8)
+          for v in views}
+
+    def bott(res):
+        return max(float(t8[res.assignment[i]][res.cuts[i], res.cuts[i + 1]])
+                   for i in range(len(res.assignment)))
+
+    assert bott(plan_k8) < bott(res=plan_k1)
+    assert plan_k8.bottleneck_ms == pytest.approx(bott(plan_k8), rel=1e-12)
+
+
+def test_stage_loads_expected_k_amortizes():
+    """stage_loads at expected_k>1 reports the amortized per-request
+    budget — strictly below the k=1 budget when no memory knee bites."""
+    g = mobilenetv2_graph()
+    planner = PartitionPlanner(g)
+    views = node_views_from_cluster(make_paper_cluster())
+    res = planner.plan(views, mode="dp")
+    l1 = planner.stage_loads(res.cuts, res.assignment, views)
+    l8 = planner.stage_loads(res.cuts, res.assignment, views, expected_k=8)
+    assert set(l1) == set(l8)
+    assert all(l8[nid] < l1[nid] for nid in l1)
+
+
+def test_bottleneck_ms_expected_k_parity_and_amortization():
+    g = mobilenetv2_graph()
+    cluster = make_paper_cluster()
+    d = DistributedInference(cluster, ModelPartitioner(g), method="planner")
+    parts, placement = d.plan.partitions, d.placement
+    base = bottleneck_ms(g, parts, placement, cluster)
+    assert bottleneck_ms(g, parts, placement, cluster,
+                         expected_k=1) == base
+    assert bottleneck_ms(g, parts, placement, cluster,
+                         expected_k=8) < base
+
+
+def test_calibrated_model_changes_planner_numbers():
+    """A calibrated BatchCostModel (curve overlay) must flow through the
+    DP matrices even at expected_k=1 — calibration is an overlay on the
+    objective, not only on k>1 paths."""
+    from repro.core.cost_model import BatchCostModel, KindCurve
+    g = mobilenetv2_graph()
+    m = BatchCostModel({"default": KindCurve(overhead_ms=6.0,
+                                             per_item_scale=1.5)})
+    views = node_views_from_cluster(make_paper_cluster())
+    base = PartitionPlanner(g).plan(views, mode="dp")
+    cal = PartitionPlanner(g, batch_model=m).plan(views, mode="dp")
+    assert cal.bottleneck_ms > base.bottleneck_ms

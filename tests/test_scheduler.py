@@ -45,6 +45,20 @@ def test_skips_offline_and_insufficient_memory():
     assert scored[1].skipped == "insufficient-resources"
 
 
+def test_cpu_requirement_gates_eligibility():
+    """Alg. 1 eligibility checks CPU against the *requirement* (like
+    memory), not merely against zero: a node with some CPU left but less
+    than the task needs is skipped."""
+    s = TaskScheduler()
+    scored = s.score_nodes([stats("tiny", cpu=0.05), stats("ok", cpu=1.0)],
+                           TaskRequirements(cpu=0.1))
+    assert scored[0].skipped == "insufficient-resources"
+    assert scored[1].skipped is None
+    # exactly-sufficient CPU stays eligible
+    scored = s.score_nodes([stats("edge", cpu=0.1)], TaskRequirements(cpu=0.1))
+    assert scored[0].skipped is None
+
+
 def test_select_returns_none_when_all_ineligible():
     s = TaskScheduler()
     assert s.select_node([stats("a", load=0.95)]) is None

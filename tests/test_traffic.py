@@ -587,6 +587,25 @@ def test_trace_arrivals_loop_replay():
     np.testing.assert_allclose(offs[3:6], np.array([0.0, 10.0, 30.0]) + 45.0)
 
 
+def test_trace_arrivals_zero_span_loop_regression():
+    """A multi-entry trace of identical timestamps has span 0, so the
+    mean gap is 0 — the wrap must still advance each repetition (by the
+    positive fallback gap) instead of replaying every loop at the same
+    instant (the double-arrival the shift exists to avoid)."""
+    tr = TraceArrivals([5.0, 5.0, 5.0])
+    offs = tr.offsets(8)
+    assert len(offs) == 8
+    assert bool(np.all(np.diff(offs) >= 0))
+    # arrivals within one repetition are legitimately simultaneous...
+    np.testing.assert_allclose(offs[:3], 0.0)
+    # ...but each repetition starts strictly later than the last
+    np.testing.assert_allclose(offs[3:6], 1.0)
+    np.testing.assert_allclose(offs[6:], 2.0)
+    # the single-entry trace keeps its 1.0 ms fallback gap
+    np.testing.assert_allclose(TraceArrivals([7.0]).offsets(3),
+                               [0.0, 1.0, 2.0])
+
+
 # --- SLO metrics --------------------------------------------------------------
 
 def test_slo_metrics_exact():
