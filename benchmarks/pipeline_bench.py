@@ -39,6 +39,14 @@ Five sections, written to ``BENCH_pipeline.json`` (repo root):
     simulated goodput (asserted in-bench, pinned exactly). A final row
     prints the committed kernel-calibration artifact's predicted
     testbed bottleneck next to the analytic model's.
+``eventspersec``
+    The fast-event-core headline: 16 placement-disjoint tenants × 50
+    nodes through (a) the heap oracle, (b) the time-wheel core with
+    sharding off — asserted **bit-for-bit equal** to the oracle, same
+    dispatched event count — and (c) the time-wheel core with automatic
+    tenant sharding. Reports events-per-wall-second per row and asserts
+    the sharded core's ≥10× events/sec speedup over the heap oracle
+    in-bench (the ISSUE-7 acceptance bar).
 ``multitenant``
     The tenancy layer at scale and under arbitration. (a) 3 tenants ×
     20 nodes × 10k open-loop requests each through one shared event heap
@@ -390,6 +398,97 @@ def batchcurve_rows(num_requests: int = BC_REQUESTS):
     return rows
 
 
+# --- fast event core ---------------------------------------------------------
+
+#: the events/sec scenario: placement-disjoint tenants on 3-node slices of
+#: the 50-node cluster, lightly loaded (2000 ms arrival gap > the ~1.5 s
+#: per-request chain), so the uncontended fused path and tenant sharding
+#: both engage — the operating point the fast core is built for
+EV_TENANTS = 16
+EV_NODES = 50
+EV_REQUESTS = 10_000         # total, split across the tenants
+EV_RATE_RPS = 0.5            # per tenant
+EV_CONCURRENCY = 8
+#: the fast core's acceptance bar: sharded events/sec vs the heap oracle
+EV_SPEEDUP_FLOOR = 10.0
+
+
+def _ev_registry():
+    """A fresh registry of ``EV_TENANTS`` MobileNetV2 tenants, each pinned
+    to its own disjoint 3-node slice (explicit assignment, so every core
+    sees the identical placement and the sharder finds the groups)."""
+    from repro.core.tenancy import TenantRegistry, TenantTraffic
+    from repro.core.traffic import DeterministicArrivals
+
+    cluster = make_synthetic_cluster(EV_NODES, seed=7)
+    nids = list(cluster.nodes)
+    reg = TenantRegistry(cluster)
+    g = mobilenetv2_graph()
+    per_tenant = EV_REQUESTS // EV_TENANTS
+    for i in range(EV_TENANTS):
+        reg.add(f"t{i}", ModelPartitioner(g),
+                traffic=TenantTraffic(
+                    num_requests=per_tenant, seed=i,
+                    concurrency=EV_CONCURRENCY,
+                    arrivals=DeterministicArrivals.at_rate(EV_RATE_RPS)),
+                num_partitions=3,
+                assignment=nids[3 * i:3 * i + 3])
+    return reg
+
+
+def eventspersec_rows():
+    """Heap oracle vs the time-wheel core (sharding off, then auto) on the
+    identical 16-tenant scenario. The unsharded fast row must reproduce
+    the oracle bit-for-bit with the same dispatched event count; the
+    sharded row must clear ``EV_SPEEDUP_FLOOR``× the oracle's events/sec
+    (both asserted here, so the committed numbers are load-bearing)."""
+    from repro.core import engine as eng_mod
+    from repro.core import fastcore
+
+    rows = []
+    runs = {}
+    for label, core, shards in (("heap-oracle", "heap", "none"),
+                                ("fastcore", "fast", "none"),
+                                ("fastcore+shards", "fast", "auto")):
+        reg = _ev_registry()
+        cfg = EngineConfig(core=core, shards=shards)
+        t0 = time.perf_counter()
+        result = reg.run(name=label, engine=cfg)
+        wall_s = time.perf_counter() - t0
+        nev = (eng_mod.LAST_EVENT_COUNT if core == "heap"
+               else fastcore.LAST_EVENT_COUNT)
+        runs[label] = (result, nev, nev / wall_s)
+        rows.append(dict(
+            config=label,
+            tenants=EV_TENANTS,
+            nodes=EV_NODES,
+            num_requests=EV_REQUESTS,
+            events=nev,
+            wall_s=round(wall_s, 2),
+            events_per_sec=round(nev / wall_s, 0),
+        ))
+
+    oracle, fast, sharded = (runs[k] for k in
+                             ("heap-oracle", "fastcore", "fastcore+shards"))
+    for name, rep in oracle[0].reports.items():
+        assert fast[0].reports[name].columns.bitwise_equal(rep.columns), (
+            f"fast core drifted from the heap oracle on tenant {name!r}")
+        assert sharded[0].reports[name].columns.bitwise_equal(rep.columns), (
+            f"sharded fast core drifted from the oracle on tenant {name!r}")
+    assert fast[1] == oracle[1], (
+        f"unsharded fast core dispatched {fast[1]} events, "
+        f"oracle {oracle[1]} — the cores disagree on the event stream")
+    rows[1]["matches_heap_oracle"] = True
+
+    speedup = sharded[2] / oracle[2]
+    assert speedup >= EV_SPEEDUP_FLOOR, (
+        f"sharded fast core managed only {speedup:.1f}× the oracle's "
+        f"events/sec (floor {EV_SPEEDUP_FLOOR:.0f}×)")
+    rows[2]["matches_oracle_columns"] = True
+    rows[2]["speedup_vs_heap"] = round(speedup, 1)
+    return rows
+
+
 # --- multi-tenant serving -----------------------------------------------------
 
 #: the tenancy scale row: 3 tenants × 20 nodes × 10k open-loop requests
@@ -521,6 +620,7 @@ def run(scale_requests: int = 100_000, write: bool = True,
         openloop=openloop_rows(),
         batchcurve=batchcurve_rows(),
         scale=scale_rows(scale_requests, budget_s=budget_s),
+        eventspersec=eventspersec_rows(),
         multitenant=multitenant_rows(
             budget_s=MT_WALL_BUDGET_S if budget_s is not None else None),
     )

@@ -9,22 +9,32 @@
 #                            shared-heap scale row + the arbitration-beats-
 #                            independent-replanning goodput comparison)
 #
-# Usage:  scripts/run_checks.sh [--skip-perf]
-#   --skip-perf  run only the fast gates (tier-1 + docs); the perf gate
+# Usage:  scripts/run_checks.sh [--skip-perf|--fast]
+#   --skip-perf  run only the tier-1 + docs gates; the perf gate
 #                re-runs the pipeline benchmark and takes ~2 min.
+#   --fast       like --skip-perf, but also deselect `slow` tests (the
+#                heavy generative sweeps, e.g. the full differential
+#                engine-parity suite, and the ~8-min moe-sharded
+#                subprocess compiles) — cuts the ~19-min tier to a few
+#                minutes; CI runs the un-flagged full gate.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== [1/3] tier-1 test suite =="
-python -m pytest -x -q
+MARKER="not perf"
+if [[ "${1:-}" == "--fast" ]]; then
+    MARKER="not perf and not slow"
+fi
+
+echo "== [1/3] tier-1 test suite (-m \"$MARKER\") =="
+python -m pytest -x -q -m "$MARKER"
 
 echo "== [2/3] docstring gate (scripts/check_docs.py) =="
 python scripts/check_docs.py
 
-if [[ "${1:-}" == "--skip-perf" ]]; then
-    echo "== [3/3] perf gate SKIPPED (--skip-perf) =="
+if [[ "${1:-}" == "--skip-perf" || "${1:-}" == "--fast" ]]; then
+    echo "== [3/3] perf gate SKIPPED (${1:-}) =="
 else
     echo "== [3/3] perf gate (pytest -m perf -> scripts/check_perf.py) =="
     python -m pytest -q -m perf

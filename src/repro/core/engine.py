@@ -143,16 +143,32 @@ class EngineConfig:
     ``micro_batch`` (which then acts as the upper bound).
     The default configuration (``legacy``, 1, ``isolated``) reproduces the
     seed loop's per-request timing bit-for-bit.
+
+    ``core`` selects the event-loop implementation: ``"fast"`` (default)
+    is the time-wheel core (``core.fastcore``) with fused chains and
+    columnar poll ticks; ``"heap"`` is the original heap loop, kept as
+    the differential oracle — the two produce bit-identical results
+    (``tests/test_engine_parity.py``). ``shards="auto"`` lets the fast
+    core run placement-disjoint controller-less tenant groups on
+    independent wheels (per-request columns and SLO metrics stay pinned;
+    poll-tick *sampling* series may differ); ``shard_workers > 1``
+    additionally forks that many worker processes.
     """
     transfer: str = "legacy"
     micro_batch: int = 1
     fabric: str = "isolated"
     adaptive_batch: bool = False
+    core: str = "fast"
+    shards: str = "none"
+    shard_workers: int = 0
 
     def __post_init__(self):
         assert self.transfer in TRANSFER_MODES, self.transfer
         assert self.micro_batch >= 1, self.micro_batch
         assert self.fabric in FABRIC_MODES, self.fabric
+        assert self.core in ("fast", "heap"), self.core
+        assert self.shards in ("none", "auto"), self.shards
+        assert self.shard_workers >= 0, self.shard_workers
 
 
 class StageEntry:
@@ -573,8 +589,8 @@ class PipelineEngine:
         drift trigger)."""
         stream = _Stream(self, num_requests, name, repeat_rate, seed,
                          concurrency, arrivals)
-        leftover, fabric = _run_event_streams(self.pipe.cluster, [stream],
-                                              cfg, scenario)
+        leftover, fabric = _dispatch_streams(self.pipe.cluster, [stream],
+                                             cfg, scenario)
         return self._report(
             name, stream.cols, stream.total_net, num_requests, leftover,
             queue_depth=(np.asarray(stream.qd_t, dtype=np.float64),
@@ -645,6 +661,28 @@ def _committed_excluding(streams: Sequence["_Stream"],
     from repro.core.tenancy import committed_budgets
     return committed_budgets([s.pipe.tenant for s in streams],
                              exclude=me.pipe.tenant) or None
+
+
+#: events dispatched by the most recent heap-oracle run
+#: (``_run_event_streams``); the fast core keeps its own counter in
+#: ``fastcore.LAST_EVENT_COUNT``, and a parity pair of runs reports equal
+#: counts — fused chain steps are counted as the heap pops they replace
+LAST_EVENT_COUNT = 0
+
+
+def _dispatch_streams(cluster, streams: Sequence["_Stream"],
+                      cfg: EngineConfig,
+                      scenario: Optional[Sequence[ScenarioEvent]],
+                      arbiter=None):
+    """Route a stream set to the configured event core: the time-wheel
+    fast core (default) or the heap oracle. Lazy import — ``fastcore``
+    imports this module at load time."""
+    if cfg.core == "fast":
+        from repro.core import fastcore
+        return fastcore.run_fast_streams(cluster, streams, cfg, scenario,
+                                         arbiter)
+    return _run_event_streams(cluster, streams, cfg, scenario,
+                              arbiter=arbiter)
 
 
 def _run_event_streams(cluster, streams: Sequence["_Stream"],
@@ -816,8 +854,10 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
         for node in touched:
             try_start(node, t)
 
+    nev = 0
     while heap and done_total < total_n:
         t, prio, _, payload = heapq.heappop(heap)
+        nev += 1
         if t > clock.now_ms:
             clock.now_ms = t
 
@@ -1060,6 +1100,9 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
                 f"completions for stream {s.name!r} — "
                 f"{s.arrived - s.done} request(s) lost in flight")
 
+    global LAST_EVENT_COUNT
+    LAST_EVENT_COUNT = nev
+
     # scenario events past the stream's end still take effect
     leftover = sorted((pl for _, pr, _, pl in heap if pr == _P_SCENARIO),
                       key=lambda e: e.at_ms)
@@ -1104,8 +1147,8 @@ class MultiTenantEngine:
             streams.append(_Stream(p._engine, tr.num_requests,
                                    f"{name}/{t.name}", tr.repeat_rate,
                                    tr.seed, tr.concurrency, tr.arrivals))
-        leftover, fabric = _run_event_streams(self.cluster, streams, cfg,
-                                              scenario, arbiter=arbiter)
+        leftover, fabric = _dispatch_streams(self.cluster, streams, cfg,
+                                             scenario, arbiter=arbiter)
         clock = self.cluster.clock
         clock.now_ms = max([clock.now_ms]
                            + [float(s.cols.finish_ms.max())

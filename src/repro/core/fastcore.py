@@ -1,0 +1,843 @@
+"""Fast event core: time-wheel scheduling, fused request chains, columnar
+completion batching, and shardable stream groups.
+
+``core.engine._run_event_streams`` — the heap event loop — is this
+module's **differential oracle**: ``run_fast_streams`` reproduces its
+``RunReport`` bit-for-bit (request columns, SLO metrics, batch
+histograms, adaptation event logs) while dispatching an order of
+magnitude more events per wall second on uncontended fleet-scale
+streams. The relationship mirrors ``DistributedInference.run_legacy``
+vs the engine's fast path: the slow loop is kept, unchanged, as the
+semantic reference, and ``tests/test_engine_parity.py`` drives both
+cores across a generative configuration space asserting equality.
+
+Four mechanisms, each engineered so every float is produced by the same
+expression in the same order as the oracle:
+
+**Time wheel** (``core.timewheel``). The global ``heapq`` becomes a
+calendar queue whose within-slot lane order is exactly the engine's
+``_P_*`` priority order; pop order is therefore identical to the heap's
+``(time, priority, seq)`` total order, and the handler bodies are the
+oracle's. The oracle's O(heap) "progress-capable events remain" scan at
+poll ticks becomes an O(1) lane-count check.
+
+**Fused chains.** A request crossing idle nodes is walked inline —
+SUBMIT → ARRIVE → compute → CDONE → (SDONE) → next ARRIVE — committing
+each step only while the step's simulated time is *strictly earlier*
+than the wheel's next event (ties fall back to the wheel, where lane
+order arbitrates exactly as the heap would) and the target node is idle
+with an empty queue. One dispatch replaces ~4 push/pop cycles per
+stage, node/stream side effects (busy windows, ``cpu_busy_ms``,
+``recent_exec``, cache puts, tenant attribution) are applied in oracle
+order, and the walk downgrades to ordinary wheel events the moment
+contention or an equal-time tie appears. Fusing is attempted only with
+``fabric=None`` (isolated links): shared-fabric flows have global state
+that individual chains cannot reason about locally.
+
+**Columnar poll ticks.** At fleet scale the oracle's dominant cost is
+not event dispatch but the per-poll monitor/scheduler refresh (building
+~50 ``NodeStats`` + ``NodeScore`` objects per stream per simulated
+second). For streams with no adaptation controller the fast core takes
+``ResourceMonitor.poll_compact`` + ``TaskScheduler.select_node_compact``
+— the same side effects (poll/overhead counters, ``cpu_busy_ms`` window
+resets, skip/queue counts, the Eq. 4 winner) from live node reads
+without materializing snapshot objects nobody will consume. Controller
+streams keep the object path — their adaptation decisions consume the
+snapshots, so those must exist bit-identically. Same-tick completion
+batches of ``COLUMNAR_K``-plus requests land in ``RequestColumns`` via
+one vectorized write instead of a per-request loop.
+
+**Sharding.** With ``EngineConfig(shards="auto")``, streams whose
+placements touch disjoint node sets (and no controller / arbiter /
+scenario / shared fabric / cache coupling) are partitioned into
+independent groups, each run to completion on its own wheel from the
+same start clock — optionally in forked worker processes
+(``shard_workers``) whose per-stream results, node counters, and
+monitor/scheduler state are merged back deterministically, along with a
+``(time, shard, entry)``-ordered merge of per-shard event logs
+(:func:`merge_shard_logs`). Sharded runs pin the per-request columns
+and SLO metrics to the interleaved run; the poll-tick *sampling* series
+(queue-depth trace, monitor overhead) legitimately differ, because a
+shard stops polling when its own streams drain rather than when the
+whole fleet does.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import engine as _eng
+from repro.core.adaptation import apply_scenario_event
+from repro.core.cost_model import link_rate_bits_per_ms
+from repro.core.fabric import FairShareFabric
+from repro.core import monitor as _mon
+from repro.core.monitor import POLL_INTERVAL_MS
+from repro.core.scheduler import SCHEDULING_OVERHEAD_MS
+from repro.core.tenancy import disjoint_placement_groups
+from repro.core.timewheel import TimeWheel
+
+#: logical events dispatched by the most recent ``run_fast_streams`` call
+#: (fused chain steps count exactly as the oracle's heap pops would, so a
+#: parity pair of runs reports equal counts — asserted by the bench)
+LAST_EVENT_COUNT = 0
+
+#: merged per-shard event log of the most recent sharded run (empty for
+#: interleaved runs) — diagnostics for tests and the bench
+LAST_SHARD_LOG: List[tuple] = []
+
+#: same-tick completion batches at or above this size take the vectorized
+#: ``RequestColumns`` write; below it a plain loop is faster than numpy
+#: fancy-indexing overhead
+COLUMNAR_K = 16
+
+
+def _run_group(cluster, streams: Sequence, cfg, scenario,
+               arbiter=None, multi: Optional[bool] = None,
+               shard_log: Optional[list] = None) -> tuple:
+    """One wheel-driven event loop over ``streams`` — the oracle
+    (``engine._run_event_streams``) handler-for-handler, with the fused
+    chain walker, compact poll ticks, and columnar completion writes
+    layered on. Returns ``(leftover_scenario_events, fabric, n_events)``.
+    """
+    clock = cluster.clock
+    mode = cfg.transfer
+    kmax = cfg.micro_batch
+    adaptive = cfg.adaptive_batch
+    fabric = (FairShareFabric(shared_uplinks=cfg.fabric == "maxmin")
+              if cfg.fabric in ("shared", "maxmin") else None)
+    if multi is None:
+        multi = len(streams) > 1
+    for s in streams:
+        if s.controller is not None:
+            s.controller.begin_stream(kmax, adaptive=adaptive)
+    done_total = 0
+    total_n = sum(s.n for s in streams)
+    t0 = clock.now_ms
+    wheel = TimeWheel()
+    nev = 0
+    n_nodes = len(cluster.nodes)
+
+    P_SCENARIO = _eng._P_SCENARIO
+    P_POLL = _eng._P_POLL
+    P_CDONE = _eng._P_CDONE
+    P_XFER = _eng._P_XFER
+    P_SDONE = _eng._P_SDONE
+    P_ARRIVE = _eng._P_ARRIVE
+    P_ARRIVAL = _eng._P_ARRIVAL
+    P_SUBMIT = _eng._P_SUBMIT
+
+    for ev in sorted(scenario or [], key=lambda e: e.at_ms):
+        wheel.push(max(ev.at_ms, t0), P_SCENARIO, ev)
+    wheel.push(t0, P_POLL, None)
+    for s in streams:
+        s.last_rate_t = t0
+        if s.arrivals is None:
+            for r in range(min(s.concurrency, s.n)):
+                wheel.push(t0, P_SUBMIT, (s, r))
+        else:
+            offs = np.asarray(s.arrivals.offsets(s.n), dtype=np.float64)
+            assert len(offs) == s.n, (
+                f"arrival process produced {len(offs)} offsets for "
+                f"{s.n} requests")
+            assert bool(np.all(np.diff(offs) >= 0)), \
+                "arrival offsets must be non-decreasing"
+            s.cols.arrival_ms[:] = t0 + offs
+            s.at_arr = s.cols.arrival_ms.tolist()
+            wheel.push(s.at_arr[0], P_ARRIVAL, (s, 0))
+
+    for node in cluster.nodes.values():
+        node.pending.clear()
+        node.engine_busy = False
+        if node.tx_free_ms < t0:
+            node.tx_free_ms = t0
+
+    def try_start(node, now: float) -> None:
+        # oracle's try_start verbatim, pushing CDONE to the wheel
+        if node.engine_busy or not node.pending:
+            return
+        q = node.pending
+        st, first = q[0]
+        stream = st._table.stream
+        ctrl = stream.controller
+        km = kmax
+        if (ctrl is not None and ctrl.batch_cap is not None
+                and ctrl.batch_cap > km):
+            km = ctrl.batch_cap
+        kcap = _eng.adaptive_k(st.queued, km) if adaptive else km
+        q.popleft()
+        st.queued -= 1
+        batch = [first]
+        while len(batch) < kcap and q and q[0][0] is st:
+            batch.append(q.popleft()[1])
+            st.queued -= 1
+        k = len(batch)
+        stream.bhist[k] = stream.bhist.get(k, 0) + 1
+        start = node.busy_until_ms
+        if now > start:
+            start = now
+        dur = st.exec_for(k)
+        end = start + dur
+        node.engine_busy = True
+        node.busy_until_ms = end
+        node.cpu_busy_ms += dur
+        node.task_count += k
+        tb = node.tenant_busy_ms
+        tb[stream.tenant_name] = tb.get(stream.tenant_name, 0.0) + dur
+        node.recent_exec.append(dur if k == 1 else dur / k)
+        st.pending_execs += k
+        wheel.push(end, P_CDONE, (node, st, batch, dur))
+
+    def finish_request(s, r: int, t: float) -> None:
+        nonlocal done_total
+        s.cols.finish_ms[r] = t
+        s.done += 1
+        done_total += 1
+        if shard_log is not None and s.done == s.n:
+            shard_log.append((t, "drained", s.name))
+        if s.arrivals is None:
+            nxt = r + s.concurrency
+            if nxt < s.n:
+                wheel.push(t, P_SUBMIT, (s, nxt))
+        else:
+            s.in_flight -= 1
+            if s.admit_q:
+                s.in_flight += 1
+                wheel.push(t, P_SUBMIT, (s, s.admit_q.popleft()))
+
+    def finish_batch(s, batch: List[int], t: float) -> None:
+        """Columnar form of k× ``finish_request``: one vectorized
+        finish-time write, then the (cheap) per-request submit/admission
+        chain in oracle order."""
+        nonlocal done_total
+        k = len(batch)
+        s.cols.finish_ms[np.asarray(batch, dtype=np.intp)] = t
+        s.done += k
+        done_total += k
+        if shard_log is not None and s.done == s.n:
+            shard_log.append((t, "drained", s.name))
+        if s.arrivals is None:
+            for r in batch:
+                nxt = r + s.concurrency
+                if nxt < s.n:
+                    wheel.push(t, P_SUBMIT, (s, nxt))
+        else:
+            for _ in batch:
+                s.in_flight -= 1
+                if s.admit_q:
+                    s.in_flight += 1
+                    wheel.push(t, P_SUBMIT, (s, s.admit_q.popleft()))
+
+    def route(table, idx: int, rs: List[int], t: float) -> None:
+        # oracle's route verbatim
+        s = table.stream
+        if s.cache is None:
+            st = table.stages[idx]
+            pend = st.node.pending
+            for r in rs:
+                pend.append((st, r))
+            st.queued += len(rs)
+            try_start(st.node, t)
+            return
+        touched = []
+        for r in rs:
+            i: Optional[int] = idx
+            while i is not None:
+                st = table.stages[i]
+                if s.cache.get(st.key_prefix + (s.sigs[r],)) is not None:
+                    s.hits[r] += 1
+                    i = st.next_index
+                else:
+                    break
+            if i is None:
+                finish_request(s, r, t)
+                continue
+            st = table.stages[i]
+            st.node.pending.append((st, r))
+            st.queued += 1
+            if st.node not in touched:
+                touched.append(st.node)
+        for node in touched:
+            try_start(node, t)
+
+    def fused_walk(s, table, r: int, ta: float) -> None:
+        """Walk one request's chain inline while every step is strictly
+        earlier than the wheel's next event and its node is idle; commits
+        the oracle's side effects step-by-step, downgrading to wheel
+        events at the first tie or contention. Caller guarantees
+        ``ta < wheel.peek_time()`` and ``fabric is None``."""
+        nonlocal nev
+        tnow = ta
+        idx = 0
+        cache = s.cache
+        stages = table.stages
+        peek_time = wheel.peek_time
+        while True:
+            # --- inline ARRIVE at tnow (strictly before the wheel head) ---
+            nev += 1
+            if tnow > clock.now_ms:
+                clock.now_ms = tnow
+            i: Optional[int] = idx
+            if cache is not None:
+                while i is not None:
+                    st = stages[i]
+                    if cache.get(st.key_prefix + (s.sigs[r],)) is not None:
+                        s.hits[r] += 1
+                        i = st.next_index
+                    else:
+                        break
+                if i is None:        # every remaining stage was cached
+                    finish_request(s, r, tnow)
+                    return
+            st = stages[i]
+            node = st.node
+            if node.engine_busy or node.pending:
+                # contention: enqueue and return to the wheel loop (the
+                # oracle's route() tail for a single-request event)
+                node.pending.append((st, r))
+                st.queued += 1
+                try_start(node, tnow)
+                return
+            # --- try_start at k=1 on an idle, empty node ---
+            s.bhist[1] = s.bhist.get(1, 0) + 1
+            start = node.busy_until_ms
+            if tnow > start:
+                start = tnow
+            dur = st.exec_ms              # exec_for(1)
+            end = start + dur
+            node.busy_until_ms = end
+            node.cpu_busy_ms += dur
+            node.task_count += 1
+            tb = node.tenant_busy_ms
+            tb[s.tenant_name] = tb.get(s.tenant_name, 0.0) + dur
+            node.recent_exec.append(dur)
+            st.pending_execs += 1
+            if not (end < peek_time()):
+                # CDONE is not next: schedule it; the node stays busy
+                # exactly as after the oracle's try_start
+                node.engine_busy = True
+                wheel.push(end, P_CDONE, (node, st, [r], dur))
+                return
+            # --- inline CDONE at end ---
+            nev += 1
+            if end > clock.now_ms:
+                clock.now_ms = end
+            s.service[r] += dur
+            if cache is not None:
+                cache.put(st.key_prefix + (s.sigs[r],), st.cache_value,
+                          transfer_bytes=st.out_bytes)
+            recv = st.recv_node
+            if recv is None:
+                # oracle: engine_busy := False (never set here), drain
+                # queue (empty — nothing ran in between), finish
+                finish_request(s, r, end)
+                return
+            ob = st.out_bytes             # * k with k == 1
+            tm = st.xfer_ms               # xfer_for(1)
+            node.net_tx_bytes += ob
+            recv.net_rx_bytes += ob
+            s.total_net += ob
+            s.comm[r] += tm
+            s.service[r] += tm
+            if mode == "overlap":
+                sx = node.tx_free_ms
+                if end > sx:
+                    sx = end
+                node.tx_free_ms = sx + tm
+                nxt_t = sx + tm
+            elif mode == "serial":
+                node.busy_until_ms = end + tm
+                nxt_t = end + tm
+                if not (nxt_t < peek_time()):
+                    # blocked send resolves on the wheel: node stays
+                    # busy until SDONE, as after the oracle's CDONE
+                    node.engine_busy = True
+                    wheel.push(nxt_t, P_SDONE, node)
+                    wheel.push(nxt_t, P_ARRIVE, (table, st.next_index, [r]))
+                    return
+                nev += 1                  # the fused SDONE dispatch
+                # SDONE effects: engine_busy stays False; queue is empty
+            else:                         # legacy
+                nxt_t = end + tm
+            if not (nxt_t < peek_time()):
+                wheel.push(nxt_t, P_ARRIVE, (table, st.next_index, [r]))
+                return
+            idx = st.next_index
+            tnow = nxt_t
+
+    while wheel and done_total < total_n:
+        t, prio, _, payload = wheel.pop()
+        nev += 1
+        if t > clock.now_ms:
+            clock.now_ms = t
+
+        if prio == P_SUBMIT:
+            s, r = payload
+            s.cols.submit_ms[r] = t
+            if s.arrivals is None:
+                s.arrived += 1
+                s.cols.arrival_ms[r] = t
+            if s.repeat_rate > 0 and s.rng.random() < s.repeat_rate:
+                s.sigs[r] = s.rng.choice(s.pattern_pool)
+            else:
+                s.sigs[r] = f"unique-{r}"
+            s.service[r] = SCHEDULING_OVERHEAD_MS
+            s.engine._ensure_placement_alive("dispatch-failed")
+            table = s.engine._current_table()
+            table.stream = s
+            s.cols.stages[r] = len(table.stages)
+            ta = t + SCHEDULING_OVERHEAD_MS
+            if fabric is None and ta < wheel.peek_time():
+                fused_walk(s, table, r, ta)
+            else:
+                wheel.push(ta, P_ARRIVE, (table, 0, [r]))
+
+        elif prio == P_ARRIVAL:
+            s, r = payload
+            s.arrived += 1
+            if s.arrived < s.n:
+                wheel.push(s.at_arr[s.arrived], P_ARRIVAL, (s, s.arrived))
+            if s.in_flight < s.concurrency:
+                s.in_flight += 1
+                wheel.push(t, P_SUBMIT, (s, r))
+            else:
+                s.admit_q.append(r)
+
+        elif prio == P_ARRIVE:
+            table, idx, rs = payload
+            route(table, idx, rs, t)
+
+        elif prio == P_CDONE:
+            node, st, batch, dur = payload
+            s = st._table.stream
+            k = len(batch)
+            for r in batch:
+                s.service[r] += dur
+            if s.cache is not None:
+                for r in batch:
+                    s.cache.put(st.key_prefix + (s.sigs[r],), st.cache_value,
+                                transfer_bytes=st.out_bytes)
+            recv = st.recv_node
+            if recv is None:
+                node.engine_busy = False
+                if k >= COLUMNAR_K:
+                    finish_batch(s, batch, t)
+                else:
+                    for r in batch:
+                        finish_request(s, r, t)
+                try_start(node, t)
+            else:
+                ob = st.out_bytes * k
+                tm = st.xfer_for(k)
+                node.net_tx_bytes += ob
+                recv.net_rx_bytes += ob
+                s.total_net += ob
+                tbl = st._table
+                if fabric is not None:
+                    fpay = (tbl, st.next_index, batch,
+                            node if mode == "serial" else None)
+                    if mode == "overlap":
+                        node.engine_busy = False
+                        if not fabric.shared_uplinks:
+                            sx = node.tx_free_ms
+                            if t > sx:
+                                sx = t
+                            node.tx_free_ms = sx + tm
+                            if sx > t:
+                                wheel.push(sx, P_XFER,
+                                           ("fs", recv, ob, tm, fpay))
+                                try_start(node, t)
+                                continue
+                    elif mode != "serial":
+                        node.engine_busy = False
+                    ver, nxt = fabric.start(
+                        recv.node_id, link_rate_bits_per_ms(recv.profile),
+                        ob * 8.0, tm, recv.profile.net_latency_ms,
+                        fpay, t, sender_id=node.node_id,
+                        sender_rate=link_rate_bits_per_ms(node.profile))
+                    wheel.push(nxt, P_XFER, ("bw", recv.node_id, ver))
+                    if mode != "serial":
+                        try_start(node, t)
+                    continue
+                for r in batch:
+                    s.comm[r] += tm
+                    s.service[r] += tm
+                if mode == "overlap":
+                    node.engine_busy = False
+                    sx = node.tx_free_ms
+                    if t > sx:
+                        sx = t
+                    node.tx_free_ms = sx + tm
+                    wheel.push(sx + tm, P_ARRIVE, (tbl, st.next_index, batch))
+                    try_start(node, t)
+                elif mode == "serial":
+                    node.busy_until_ms = t + tm
+                    wheel.push(t + tm, P_SDONE, node)
+                    wheel.push(t + tm, P_ARRIVE, (tbl, st.next_index, batch))
+                else:
+                    node.engine_busy = False
+                    wheel.push(t + tm, P_ARRIVE, (tbl, st.next_index, batch))
+                    try_start(node, t)
+
+        elif prio == P_XFER:
+            if payload[0] == "bw":
+                _, link_id, ver = payload
+                res = fabric.on_event(link_id, ver, t)
+                if res is not None:
+                    delivered, nxt = res
+                    for fpayload, at, elapsed in delivered:
+                        wheel.push(at, P_XFER, ("dl", fpayload, elapsed))
+                    if nxt is not None:
+                        wheel.push(nxt[1], P_XFER, ("bw", link_id, nxt[0]))
+            elif payload[0] == "fs":
+                _, recv, ob, tm, fpay = payload
+                ver, nxt = fabric.start(
+                    recv.node_id, link_rate_bits_per_ms(recv.profile),
+                    ob * 8.0, tm, recv.profile.net_latency_ms, fpay, t)
+                wheel.push(nxt, P_XFER, ("bw", recv.node_id, ver))
+            else:
+                _, (tbl, idx, batch, blocked), elapsed = payload
+                s = tbl.stream
+                for r in batch:
+                    s.comm[r] += elapsed
+                    s.service[r] += elapsed
+                if blocked is not None:
+                    blocked.busy_until_ms = t
+                    blocked.engine_busy = False
+                    try_start(blocked, t)
+                route(tbl, idx, batch, t)
+
+        elif prio == P_SDONE:
+            node = payload
+            node.engine_busy = False
+            try_start(node, t)
+
+        elif prio == P_POLL:
+            if shard_log is not None:
+                # shard mode (gated on controller-less, scenario-less,
+                # isolated runs): monitor/scheduler poll state never feeds
+                # back into request timing there, and the sampling series
+                # are already declared shard-divergent, so the tick
+                # degenerates to O(streams): poll stamp + bulk overhead
+                # charge + queue-depth samples
+                shard_log.append((t, "poll", len(streams)))
+                for s in streams:
+                    m = s.monitor
+                    if t - m.last_poll_ms >= POLL_INTERVAL_MS:
+                        m.last_poll_ms = t
+                        m.polls += 1
+                        m.overhead_ms += (
+                            _mon.MONITOR_COST_MS_PER_POLL * n_nodes)
+                    s.qd_t.append(t)
+                    s.qd_n.append(s.arrived - s.done)
+                if wheel.count_outside_lanes(P_POLL, P_SCENARIO) > 0:
+                    wheel.push(t + POLL_INTERVAL_MS, P_POLL, None)
+                continue
+            for s in streams:
+                if t - s.monitor.last_poll_ms >= POLL_INTERVAL_MS:
+                    if s.controller is None:
+                        # compact tick: identical side effects and Eq. 4
+                        # winner from live node reads, no snapshot objects
+                        online = s.monitor.poll_compact()
+                        s.scheduler.select_node_compact(online)
+                    else:
+                        stats = s.monitor.online_stats()
+                        s.scheduler.select_node(stats)
+                    s.engine._flush_sched()
+                s.qd_t.append(t)
+                s.qd_n.append(s.arrived - s.done)
+                if s.controller is not None:
+                    s.controller.last_queue_depth = s.arrived - s.done
+                if s.arrivals is not None and s.controller is not None:
+                    window = t - s.last_rate_t
+                    if window > 0:
+                        s.controller.observe_rates(
+                            1000.0 * (s.arrived - s.last_arr) / window,
+                            1000.0 * (s.done - s.last_done) / window)
+                        s.last_rate_t, s.last_arr, s.last_done = (
+                            t, s.arrived, s.done)
+            if multi:
+                for s in streams:
+                    if s.controller is not None:
+                        s.pipe.committed_ms = _eng._committed_excluding(
+                            streams, s)
+            if arbiter is not None:
+                arbiter.on_engine_event("poll")
+            else:
+                for s in streams:
+                    if s.controller is not None:
+                        s.controller.on_engine_event("poll")
+            if wheel.count_outside_lanes(P_POLL, P_SCENARIO) > 0:
+                wheel.push(t + POLL_INTERVAL_MS, P_POLL, None)
+
+        else:                              # P_SCENARIO
+            apply_scenario_event(cluster, payload)
+            dead = [s for s in streams
+                    if not s.engine._placement_alive()]
+            for s in dead:
+                if s.controller is None:
+                    s.pipe._repair_placement()
+            if dead:
+                if arbiter is not None:
+                    arbiter.on_engine_event("scenario", force_poll=True)
+                else:
+                    for s in dead:
+                        if s.controller is not None:
+                            s.controller.on_engine_event("scenario",
+                                                         force_poll=True)
+
+    for s in streams:
+        if s.done < s.n:
+            raise RuntimeError(
+                f"engine drained its event wheel with {s.done}/{s.n} "
+                f"completions for stream {s.name!r} — "
+                f"{s.arrived - s.done} request(s) lost in flight")
+
+    leftover = sorted((pl for _, pr, _, pl in wheel if pr == P_SCENARIO),
+                      key=lambda e: e.at_ms)
+    for s in streams:
+        s.cols.comm_ms[:] = s.comm
+        s.cols.service_ms[:] = s.service
+        s.cols.cache_hits[:] = s.hits
+    return leftover, fabric, nev
+
+
+# --- sharding ----------------------------------------------------------------
+
+
+def shard_groups(streams: Sequence) -> List[List]:
+    """Partition ``streams`` into placement-disjoint groups (the tenancy
+    layer's union-find over shared placement nodes). Streams in different
+    groups never touch the same node, so their event timelines are
+    independent."""
+    idx_groups = disjoint_placement_groups([s.pipe.placement
+                                            for s in streams])
+    return [[streams[i] for i in g] for g in idx_groups]
+
+
+def _shardable(streams: Sequence, cfg, scenario, arbiter) -> Optional[List[List]]:
+    """The placement-disjoint groups when sharding is enabled and safe —
+    no controller/arbiter (control ticks observe the whole fleet), no
+    scenario events (they mutate shared cluster state at global times),
+    isolated fabric (shared links couple timelines) — else None."""
+    if cfg.shards != "auto" or arbiter is not None or scenario:
+        return None
+    if cfg.fabric != "isolated":
+        return None
+    if any(s.controller is not None for s in streams):
+        return None
+    groups = shard_groups(streams)
+    return groups if len(groups) > 1 else None
+
+
+def merge_shard_logs(logs: Sequence[Sequence[tuple]]) -> List[tuple]:
+    """Deterministic k-way merge of per-shard event logs: entries ordered
+    by ``(time, shard_index, within-shard order)`` — invariant under any
+    permutation of equal shard content (the shard index is re-derived
+    from sorted first-entry identity, not arrival order)."""
+    out = []
+    for si, log in enumerate(logs):
+        for ei, entry in enumerate(log):
+            out.append((entry[0], si, ei, entry))
+    out.sort(key=lambda x: (x[0], x[1], x[2]))
+    return [(si,) + tuple(entry) for _, si, _, entry in
+            ((t, si, ei, entry) for t, si, ei, entry in out)]
+
+
+def _group_state(cluster, group: Sequence, log: list, nev: int) -> dict:
+    """Pickle-able end-of-run state of one forked shard: per-stream
+    results, per-node counters, and per-stream monitor/scheduler state.
+    The child flushes its scheduler feed first so stage-table counters
+    need not travel."""
+    for s in group:
+        s.engine._flush_sched()
+    nodes = {}
+    for s in group:
+        for nid in set(s.pipe.placement.values()):
+            n = cluster.nodes[nid]
+            assert not n.pending and not n.engine_busy, nid
+            nodes[nid] = dict(
+                busy_until_ms=n.busy_until_ms, cpu_busy_ms=n.cpu_busy_ms,
+                task_count=n.task_count, mem_used_bytes=n.mem_used_bytes,
+                net_rx_bytes=n.net_rx_bytes, net_tx_bytes=n.net_tx_bytes,
+                tx_free_ms=n.tx_free_ms,
+                tenant_busy_ms=dict(n.tenant_busy_ms),
+                recent_exec=list(n.recent_exec))
+    def stream_state(s):
+        m, sch = s.monitor, s.scheduler
+        return dict(
+            cols={f: getattr(s.cols, f) for f in
+                  ("arrival_ms", "submit_ms", "finish_ms", "comm_ms",
+                   "service_ms", "cache_hits", "stages")},
+            comm=s.comm, service=s.service, hits=s.hits, sigs=s.sigs,
+            total_net=s.total_net, done=s.done, arrived=s.arrived,
+            in_flight=s.in_flight, qd_t=s.qd_t, qd_n=s.qd_n,
+            bhist=s.bhist, last_rate_t=s.last_rate_t, last_arr=s.last_arr,
+            last_done=s.last_done,
+            monitor=dict(last_poll_ms=m.last_poll_ms, polls=m.polls,
+                         overhead_ms=m.overhead_ms,
+                         offline_seen=set(m._offline_seen)),
+            scheduler=dict(exec_history=sch.exec_history,
+                           perf_ratios=sch.perf_ratios,
+                           task_counts=sch.task_counts,
+                           skip_counts=sch.skip_counts,
+                           node_service_ms=sch.node_service_ms,
+                           decisions=sch.decisions,
+                           overhead_ms=sch.overhead_ms))
+    return dict(streams=[stream_state(s) for s in group], nodes=nodes,
+                clock=cluster.clock.now_ms, log=log, nev=nev)
+
+
+def _apply_group_state(cluster, group: Sequence, state: dict) -> None:
+    """Merge one forked shard's end state back into the parent process."""
+    for nid, nd in state["nodes"].items():
+        n = cluster.nodes[nid]
+        n.busy_until_ms = nd["busy_until_ms"]
+        n.cpu_busy_ms = nd["cpu_busy_ms"]
+        n.task_count = nd["task_count"]
+        n.mem_used_bytes = nd["mem_used_bytes"]
+        n.net_rx_bytes = nd["net_rx_bytes"]
+        n.net_tx_bytes = nd["net_tx_bytes"]
+        n.tx_free_ms = nd["tx_free_ms"]
+        n.tenant_busy_ms = nd["tenant_busy_ms"]
+        n.recent_exec = deque(nd["recent_exec"],
+                              maxlen=n.recent_exec.maxlen)
+    for s, ss in zip(group, state["streams"]):
+        for f, arr in ss["cols"].items():
+            getattr(s.cols, f)[:] = arr
+        s.comm, s.service, s.hits, s.sigs = (
+            ss["comm"], ss["service"], ss["hits"], ss["sigs"])
+        s.total_net = ss["total_net"]
+        s.done, s.arrived, s.in_flight = (
+            ss["done"], ss["arrived"], ss["in_flight"])
+        s.qd_t, s.qd_n, s.bhist = ss["qd_t"], ss["qd_n"], ss["bhist"]
+        s.last_rate_t, s.last_arr, s.last_done = (
+            ss["last_rate_t"], ss["last_arr"], ss["last_done"])
+        m = ss["monitor"]
+        s.monitor.last_poll_ms = m["last_poll_ms"]
+        s.monitor.polls = m["polls"]
+        s.monitor.overhead_ms = m["overhead_ms"]
+        s.monitor._offline_seen = m["offline_seen"]
+        sch = ss["scheduler"]
+        s.scheduler.exec_history = sch["exec_history"]
+        s.scheduler.perf_ratios = sch["perf_ratios"]
+        s.scheduler.task_counts = sch["task_counts"]
+        s.scheduler.skip_counts = sch["skip_counts"]
+        s.scheduler.node_service_ms = sch["node_service_ms"]
+        s.scheduler.decisions = sch["decisions"]
+        s.scheduler.overhead_ms = sch["overhead_ms"]
+
+
+def _read_exact(fd: int, n: int) -> bytes:
+    chunks = []
+    while n:
+        b = os.read(fd, min(n, 1 << 20))
+        if not b:
+            raise RuntimeError("shard worker pipe closed early")
+        chunks.append(b)
+        n -= len(b)
+    return b"".join(chunks)
+
+
+def _run_sharded(cluster, streams, cfg, groups, multi) -> tuple:
+    """Run placement-disjoint groups each on its own wheel from the same
+    start clock — forked workers when ``cfg.shard_workers > 1`` (and no
+    cache state would need to travel), else in-process sequentially —
+    and merge results deterministically."""
+    global LAST_SHARD_LOG
+    clock = cluster.clock
+    t0 = clock.now_ms
+    nev_total = 0
+    ends: List[float] = []
+    logs: List[list] = []
+    fork_ok = (cfg.shard_workers > 1 and hasattr(os, "fork")
+               and all(s.cache is None for g in groups for s in g))
+    if not fork_ok:
+        for group in groups:
+            clock.now_ms = t0
+            log: list = []
+            _, _, nev = _run_group(cluster, group, cfg, None, None,
+                                   multi=multi, shard_log=log)
+            ends.append(clock.now_ms)
+            logs.append(log)
+            nev_total += nev
+    else:
+        workers = min(cfg.shard_workers, len(groups))
+        lanes = [groups[i::workers] for i in range(workers)]
+        procs = []
+        for glist in lanes:
+            rfd, wfd = os.pipe()
+            pid = os.fork()
+            if pid == 0:                      # child
+                os.close(rfd)
+                code = 0
+                try:
+                    payload = []
+                    for group in glist:
+                        clock.now_ms = t0
+                        log = []
+                        _, _, nev = _run_group(cluster, group, cfg, None,
+                                               None, multi=multi,
+                                               shard_log=log)
+                        payload.append(_group_state(cluster, group, log,
+                                                    nev))
+                    blob = pickle.dumps(("ok", payload),
+                                        protocol=pickle.HIGHEST_PROTOCOL)
+                except BaseException as e:    # ship the failure, then die
+                    blob = pickle.dumps(("err", repr(e)))
+                    code = 1
+                try:
+                    os.write(wfd, len(blob).to_bytes(8, "big"))
+                    os.write(wfd, blob)
+                    os.close(wfd)
+                finally:
+                    os._exit(code)
+            os.close(wfd)
+            procs.append((pid, rfd, glist))
+        for pid, rfd, glist in procs:
+            size = int.from_bytes(_read_exact(rfd, 8), "big")
+            status, payload = pickle.loads(_read_exact(rfd, size))
+            os.close(rfd)
+            os.waitpid(pid, 0)
+            if status != "ok":
+                raise RuntimeError(f"shard worker failed: {payload}")
+            for group, state in zip(glist, payload):
+                _apply_group_state(cluster, group, state)
+                ends.append(state["clock"])
+                logs.append(state["log"])
+                nev_total += state["nev"]
+        # re-order logs back to group order (lanes interleave round-robin)
+        order = [g for lane in lanes for g in lane]
+        remap = {id(g): i for i, g in enumerate(order)}
+        paired = sorted(zip((remap[id(g)] for lane in lanes for g in lane),
+                            logs))
+        logs = [lg for _, lg in paired]
+    clock.now_ms = max(ends) if ends else t0
+    LAST_SHARD_LOG = merge_shard_logs(logs)
+    return [], None, nev_total
+
+
+def run_fast_streams(cluster, streams: Sequence, cfg,
+                     scenario, arbiter=None) -> tuple:
+    """Drop-in fast-core replacement for the oracle loop
+    (``engine._run_event_streams``): same signature, same return shape,
+    bit-for-bit identical per-stream results. Dispatches to one
+    interleaved wheel run, or to placement-disjoint shard groups when
+    ``cfg.shards == "auto"`` permits."""
+    global LAST_EVENT_COUNT, LAST_SHARD_LOG
+    streams = list(streams)
+    groups = _shardable(streams, cfg, scenario, arbiter)
+    if groups is not None:
+        leftover, fabric, nev = _run_sharded(cluster, streams, cfg, groups,
+                                             multi=len(streams) > 1)
+    else:
+        LAST_SHARD_LOG = []
+        leftover, fabric, nev = _run_group(cluster, streams, cfg, scenario,
+                                           arbiter=arbiter,
+                                           multi=len(streams) > 1)
+    LAST_EVENT_COUNT = nev
+    return leftover, fabric

@@ -128,6 +128,35 @@ class ResourceMonitor:
             stability=stab,
         )
 
+    def poll_compact(self) -> List[EdgeNode]:
+        """Snapshot-free poll tick for the fast event core
+        (``core.fastcore``), used only for streams with no adaptation
+        controller — the only consumers of :class:`NodeStats` snapshots
+        and history are adaptation triggers and forced repair polls (which
+        re-poll with ``force=True`` and so rebuild identical snapshots
+        from the identical node state).
+
+        Side effects are bit-identical to :meth:`poll`: the poll stamp and
+        counter, the per-node overhead charge in node order, the per-node
+        ``cpu_busy_ms`` window reset, and offline detection. What is
+        skipped is only the *allocation* — ~N ``NodeStats`` objects and
+        history appends per simulated second that nobody would read.
+        Returns the online nodes (same order as ``online_stats``) for
+        ``TaskScheduler.select_node_compact``. Caller owns the interval
+        gate, exactly like the engine's poll handler."""
+        self.last_poll_ms = self.cluster.clock.now_ms
+        self.polls += 1
+        online: List[EdgeNode] = []
+        seen = self._offline_seen
+        for node in self.cluster.nodes.values():
+            self.overhead_ms += MONITOR_COST_MS_PER_POLL
+            node.cpu_busy_ms = 0.0
+            if node.online:
+                online.append(node)
+            elif node.node_id not in seen:
+                seen.add(node.node_id)
+        return online
+
     def online_stats(self) -> List[NodeStats]:
         """Fresh-enough snapshots of the currently-online nodes."""
         self.poll()

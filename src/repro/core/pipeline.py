@@ -109,6 +109,17 @@ class RequestColumns:
         """Per-request SLO flag: sojourn within ``deadline_ms``."""
         return self.sojourn_ms <= deadline_ms
 
+    def bitwise_equal(self, other: "RequestColumns") -> bool:
+        """Exact (bit-for-bit, no tolerance) equality of every column —
+        the differential-parity predicate used by the engine-parity suite
+        and the events-per-second benchmark to compare a fast-core run
+        against the heap oracle. NaN-free by construction (columns hold
+        simulated times/counters), so ``array_equal`` is exact equality."""
+        if len(self) != len(other):
+            return False
+        return all(np.array_equal(getattr(self, f), getattr(other, f))
+                   for f in self.__slots__)
+
     @classmethod
     def from_requests(cls, requests: Sequence[RequestMetrics]
                       ) -> "RequestColumns":

@@ -40,7 +40,7 @@ pinned bit-for-bit by ``tests/test_tenancy.py``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, TYPE_CHECKING
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
 
 from repro.core.adaptation import ScenarioEvent
 from repro.core.cluster import EdgeCluster
@@ -165,6 +165,35 @@ def committed_budgets(tenants, exclude=None) -> Dict[str, float]:
         for nid, ms in t.node_time_ms().items():
             out[nid] = out.get(nid, 0.0) + ms
     return out
+
+
+def disjoint_placement_groups(placements) -> List[List[int]]:
+    """Partition placement maps (stage -> node id) into groups that share
+    no node — union-find over shared placement nodes. Returns index
+    groups, each sorted, ordered by smallest member. Two tenants in
+    different groups can never contend for an engine, queue slot, or
+    (isolated-fabric) link, which is what lets the fast event core
+    (``core.fastcore``) run each group on an independent event wheel."""
+    parent = list(range(len(placements)))
+
+    def find(i: int) -> int:
+        while parent[i] != i:
+            parent[i] = parent[parent[i]]
+            i = parent[i]
+        return i
+
+    node_owner: Dict[str, int] = {}
+    for i, placement in enumerate(placements):
+        for nid in set(placement.values()):
+            j = node_owner.get(nid)
+            if j is None:
+                node_owner[nid] = i
+            else:
+                parent[find(i)] = find(j)
+    groups: Dict[int, List[int]] = {}
+    for i in range(len(placements)):
+        groups.setdefault(find(i), []).append(i)
+    return [groups[k] for k in sorted(groups)]
 
 
 class TenantRegistry:

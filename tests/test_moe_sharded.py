@@ -58,6 +58,7 @@ SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.timeout(900)
+@pytest.mark.slow
 def test_sharded_moe_paths_match_local():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -117,6 +118,7 @@ SMBLOCK_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.timeout(900)
+@pytest.mark.slow
 def test_shardmap_dense_block_matches_gspmd():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

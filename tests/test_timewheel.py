@@ -1,0 +1,225 @@
+"""Property and metamorphic tests for the time-wheel scheduler and the
+fast event core — deliberately oracle-free: none of these compare against
+the heap engine (that is ``test_engine_parity.py``'s job), so a failure
+here localizes to the wheel or the fast core itself rather than to the
+differential comparison."""
+
+import heapq
+import random
+
+import numpy as np
+import pytest
+from conftest import given, settings, st
+
+from repro.core.cluster import make_synthetic_cluster
+from repro.core.engine import EngineConfig
+from repro.core.partitioner import ModelPartitioner
+from repro.core.pipeline import DistributedInference
+from repro.core.timewheel import NUM_LANES, TimeWheel
+from repro.core.traffic import DeterministicArrivals, PoissonArrivals
+from repro.models.graph import mobilenetv2_graph
+
+GRAPH = mobilenetv2_graph()
+
+
+# --- the wheel itself -------------------------------------------------------
+
+
+def _drain(wheel):
+    out = []
+    while wheel:
+        out.append(wheel.pop())
+    return out
+
+
+@settings(max_examples=50)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n=st.integers(min_value=1, max_value=300))
+def test_wheel_matches_heapq_total_order(seed, n):
+    """Random interleavings of pushes and pops reproduce the heap's
+    ``(time, lane, seq)`` total order element-for-element."""
+    rnd = random.Random(seed)
+    wheel, heap, seq = TimeWheel(), [], 0
+    popped_w, popped_h = [], []
+    for _ in range(n):
+        if heap and rnd.random() < 0.4:
+            popped_w.append(wheel.pop())
+            popped_h.append(heapq.heappop(heap))
+        else:
+            # cluster times around the cursor so same-slot, adjacent-slot,
+            # and far-future pushes all occur
+            base = popped_h[-1][0] if popped_h else 0.0
+            t = base + rnd.choice((0.0, rnd.uniform(0, 5),
+                                   rnd.uniform(0, 500),
+                                   rnd.uniform(0, 50_000)))
+            lane = rnd.randrange(NUM_LANES)
+            wheel.push(t, lane, seq)
+            heapq.heappush(heap, (t, lane, seq, seq))
+            seq += 1
+    while heap:
+        popped_w.append(wheel.pop())
+        popped_h.append(heapq.heappop(heap))
+    assert popped_w == popped_h
+    assert len(wheel) == 0 and not wheel
+
+
+def test_wheel_pop_time_non_decreasing_across_lanes():
+    """Pops never go back in time, whatever lane an event sits on — and
+    equal-time pops order by lane, then insertion."""
+    rnd = random.Random(7)
+    wheel = TimeWheel()
+    for i in range(2000):
+        wheel.push(rnd.uniform(0, 10_000), rnd.randrange(NUM_LANES), i)
+    drained = _drain(wheel)
+    keys = [(t, lane, s) for t, lane, s, _ in drained]
+    assert keys == sorted(keys)
+    times = [t for t, _, _, _ in drained]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+def test_wheel_peek_is_consistent_with_pop():
+    rnd = random.Random(3)
+    wheel = TimeWheel()
+    for i in range(500):
+        wheel.push(rnd.uniform(0, 5000), rnd.randrange(NUM_LANES), i)
+    while wheel:
+        t = wheel.peek_time()
+        key = wheel.peek()
+        item = wheel.pop()
+        assert item[:3] == key and item[0] == t
+    assert wheel.peek() is None
+    assert wheel.peek_time() == float("inf")
+
+
+def test_wheel_lane_counts_and_iter():
+    wheel = TimeWheel()
+    for i in range(30):
+        wheel.push(float(i % 7), i % NUM_LANES, ("p", i))
+    assert wheel.count_outside_lanes() == 30
+    n_lane0 = sum(1 for _, lane, _, _ in wheel if lane == 0)
+    assert wheel.count_outside_lanes(0) == 30 - n_lane0
+    assert sorted(p[1] for _, _, _, p in wheel) == list(range(30))
+    for _ in range(10):
+        wheel.pop()
+    assert len(list(wheel)) == len(wheel) == 20
+
+
+def test_wheel_push_into_visited_slot_keeps_order():
+    """A handler pushing into the slot the cursor already sorted (the
+    common successor-event case) must still pop in key order."""
+    wheel = TimeWheel(slot_ms=1000.0)   # everything in one slot
+    for i in range(10):
+        wheel.push(float(10 - i), 5, i)
+    assert wheel.pop()[0] == 1.0        # sorts the slot
+    wheel.push(0.5, 5, "early")         # before the cursor's next item
+    wheel.push(1.5, 0, "lane-first")
+    assert wheel.pop()[3] == "early"
+    assert wheel.pop()[3] == "lane-first"
+    assert wheel.pop()[0] == 2.0
+
+
+# --- fast-core behavioral properties (oracle-free) --------------------------
+
+
+def _fast_run(arrivals=None, n=120, seed=0, concurrency=6, shards="none",
+              nodes=6, tenants=None, **cfg_kw):
+    cl = make_synthetic_cluster(nodes, seed=3)
+    pipe = DistributedInference(cl, ModelPartitioner(GRAPH),
+                                num_partitions=3, method="planner")
+    cfg = EngineConfig(core="fast", shards=shards, **cfg_kw)
+    return pipe.run(n, repeat_rate=0.2, seed=seed, concurrency=concurrency,
+                    engine=cfg, arrivals=arrivals)
+
+
+def test_request_conservation_closed_loop():
+    rep = _fast_run(n=150, micro_batch=4, adaptive_batch=True,
+                    transfer="overlap")
+    c = rep.columns
+    assert len(c) == 150
+    assert np.all(c.finish_ms > 0)                  # every request finished
+    assert np.all(c.finish_ms >= c.submit_ms)
+    assert np.all(c.submit_ms >= c.arrival_ms)
+    assert sum(k * v for k, v in rep.batch_hist.items()) % 150 == 0
+
+
+def test_per_node_fifo_order_single_stream():
+    """k=1 FIFO queues: one stream's requests leave each stage in submit
+    order, so finish times are non-decreasing in request index."""
+    rep = _fast_run(arrivals=DeterministicArrivals.at_rate(2.0), n=100)
+    assert np.all(np.diff(rep.columns.finish_ms) >= 0)
+    assert np.all(np.diff(rep.columns.submit_ms) >= 0)
+
+
+def test_goodput_not_above_offered_load():
+    """Completions per simulated second cannot exceed the offered arrival
+    rate: the makespan extends at least to the last arrival."""
+    rate = 5.0
+    rep = _fast_run(arrivals=PoissonArrivals(rate_rps=rate, seed=11), n=200)
+    c = rep.columns
+    makespan_s = (c.finish_ms.max() - c.arrival_ms.min()) / 1000.0
+    goodput = len(c) / makespan_s
+    offered = len(c) / ((c.arrival_ms.max() - c.arrival_ms.min()) / 1000.0)
+    assert goodput <= offered * (1 + 1e-9)
+
+
+def test_determinism_under_global_rng_scrambling():
+    """The fast core draws randomness only from explicitly seeded
+    generators: scrambling the global RNGs between runs changes nothing."""
+    random.seed(1234)
+    np.random.seed(99)
+    a = _fast_run(arrivals=PoissonArrivals(rate_rps=4.0, seed=2), n=150,
+                  micro_batch=4, transfer="serial")
+    random.seed(987654)
+    np.random.seed(1)
+    _ = [random.random() for _ in range(37)] + [np.random.random()]
+    b = _fast_run(arrivals=PoissonArrivals(rate_rps=4.0, seed=2), n=150,
+                  micro_batch=4, transfer="serial")
+    assert a.columns.bitwise_equal(b.columns)
+    assert a.batch_hist == b.batch_hist
+    assert a.network_bytes == b.network_bytes
+
+
+def test_sharded_run_matches_interleaved_columns():
+    """Placement-disjoint tenants on independent wheels produce the same
+    per-request columns as the interleaved run (an internal metamorphic
+    check — no heap engine involved)."""
+    from repro.core.tenancy import TenantRegistry, TenantTraffic
+
+    def run(shards, workers=0):
+        cl = make_synthetic_cluster(9, seed=5)
+        reg = TenantRegistry(cl)
+        nids = list(cl.nodes)
+        for i in range(3):
+            reg.add(f"t{i}", ModelPartitioner(GRAPH),
+                    traffic=TenantTraffic(
+                        num_requests=60, seed=i, concurrency=4,
+                        arrivals=DeterministicArrivals.at_rate(0.5)),
+                    num_partitions=3,
+                    assignment=[nids[3 * i], nids[3 * i + 1],
+                                nids[3 * i + 2]])
+        cfg = EngineConfig(core="fast", shards=shards,
+                           shard_workers=workers)
+        return reg.run(engine=cfg)
+
+    base = run("none")
+    sharded = run("auto")
+    forked = run("auto", workers=2)
+    for name, rep in base.reports.items():
+        assert sharded.reports[name].columns.bitwise_equal(rep.columns)
+        assert forked.reports[name].columns.bitwise_equal(rep.columns)
+        assert sharded.reports[name].batch_hist == rep.batch_hist
+
+
+def test_shard_log_merge_deterministic():
+    """The merged per-shard event log orders entries by (time, shard,
+    within-shard sequence) and is invariant across repeat runs."""
+    from repro.core.fastcore import merge_shard_logs
+
+    logs = [[(5.0, "poll", 1), (9.0, "drained", "a")],
+            [(5.0, "poll", 1), (7.0, "drained", "b")]]
+    merged = merge_shard_logs(logs)
+    assert merged == [(0, 5.0, "poll", 1), (1, 5.0, "poll", 1),
+                      (1, 7.0, "drained", "b"), (0, 9.0, "drained", "a")]
+    times = [e[1] for e in merged]
+    assert times == sorted(times)
+    assert merge_shard_logs(logs) == merged
