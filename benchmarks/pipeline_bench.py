@@ -398,6 +398,92 @@ def batchcurve_rows(num_requests: int = BC_REQUESTS):
     return rows
 
 
+# --- fault storm --------------------------------------------------------------
+
+#: the fault-storm scenario: one MobileNetV2 tenant on an 8-node fleet,
+#: Poisson open-loop traffic with an SLO deadline, under transient node
+#: crash/restart + transfer loss + execution faults + heavy-tailed
+#: stragglers (one seeded draw sequence per policy, so every row is
+#: bit-reproducible and guarded exactly by ``scripts/check_perf.py``)
+FS_NODES = 8
+FS_CRASH_NODES = 4           # only the first half of the fleet crash-cycles
+FS_REQUESTS = 600
+FS_RATE_RPS = 2.0
+FS_DEADLINE_MS = 2500.0
+FS_SEED = 23
+FS_HAZARDS = dict(seed=FS_SEED, crash_mtbf_ms=30_000.0,
+                  crash_mttr_ms=1500.0, loss_rate=0.01,
+                  exec_fail_rate=0.01, straggler_rate=0.05,
+                  straggler_shape=2.5, straggler_scale=2.0)
+#: the retry policy shared by the non-naive rungs: backoff_base covers a
+#: full crash_mttr window within two attempts, timeouts cut stragglers
+#: loose at 3x the predicted stage time
+FS_RETRY = dict(max_attempts=6, backoff_base_ms=250.0, timeout_slack=3.0)
+
+
+def faultstorm_rows(num_requests: int = FS_REQUESTS):
+    """Recovery-policy ladder under the identical seeded fault storm:
+    naive fail-on-first-error, retry+timeout+backoff, and the full
+    policy (retries + hedged duplicates + deadline-aware shedding). The
+    full policy must beat naive on deadline-meeting goodput AND on p99
+    sojourn over completed requests (asserted here, so the committed
+    numbers are load-bearing)."""
+    from repro.core.faults import FaultConfig
+    from repro.core.tenancy import TenantRegistry, TenantTraffic
+
+    # naive-fail is the ISSUE's fail-and-replan baseline: one attempt per
+    # request, and every transient crash tears down and re-places the
+    # partition plan (repair_on_crash=True); the resilient rungs instead
+    # ride out a crash_mttr window with retry+backoff
+    policies = [
+        ("naive-fail", dict(max_attempts=1, repair_on_crash=True)),
+        ("retry-backoff", dict(FS_RETRY)),
+        ("resilient-hedge+shed", dict(FS_RETRY, hedge=True, shed=True)),
+    ]
+    g = mobilenetv2_graph()
+    rows = []
+    stats = {}
+    for label, policy in policies:
+        cluster = make_synthetic_cluster(FS_NODES, seed=3)
+        fc = FaultConfig(crash_nodes=tuple(list(cluster.nodes)[:FS_CRASH_NODES]),
+                         **FS_HAZARDS, **policy)
+        reg = TenantRegistry(cluster)
+        reg.add("storm", ModelPartitioner(g),
+                traffic=TenantTraffic(
+                    num_requests=num_requests, seed=FS_SEED,
+                    concurrency=32, deadline_ms=FS_DEADLINE_MS,
+                    arrivals=PoissonArrivals(rate_rps=FS_RATE_RPS,
+                                             seed=FS_SEED)),
+                method="planner")
+        rep = reg.run(name=label,
+                      engine=EngineConfig(transfer="overlap", micro_batch=4,
+                                          adaptive_batch=True,
+                                          faults=fc))["storm"]
+        fs = rep.fault_stats
+        done = rep.columns.status == 0
+        p99_done = float(np.percentile(rep.columns.sojourn_ms[done], 99))
+        gp = rep.goodput_rps(FS_DEADLINE_MS)
+        stats[label] = (gp, p99_done)
+        rows.append(dict(
+            config=label,
+            num_requests=num_requests,
+            done=fs["done"], shed=fs["shed"], failed=fs["failed"],
+            availability=round(fs["availability"], 4),
+            retries=fs["retries_total"], hedges=fs["hedges_total"],
+            crashes=fs["crashes"], restarts=fs["restarts"],
+            goodput_rps=round(gp, 4),
+            p99_done_sojourn_ms=round(p99_done, 2),
+        ))
+    naive, full = stats["naive-fail"], stats["resilient-hedge+shed"]
+    assert full[0] > naive[0], (
+        "the full recovery policy must beat naive fail-on-error on "
+        f"deadline-meeting goodput: {full[0]:.3f} vs {naive[0]:.3f}")
+    assert full[1] < naive[1], (
+        "the full recovery policy must beat naive fail-on-error on p99 "
+        f"sojourn over completed requests: {full[1]:.1f} vs {naive[1]:.1f}")
+    return rows
+
+
 # --- fast event core ---------------------------------------------------------
 
 #: the events/sec scenario: placement-disjoint tenants on 3-node slices of
@@ -619,6 +705,7 @@ def run(scale_requests: int = 100_000, write: bool = True,
         modes=mode_rows(),
         openloop=openloop_rows(),
         batchcurve=batchcurve_rows(),
+        faultstorm=faultstorm_rows(),
         scale=scale_rows(scale_requests, budget_s=budget_s),
         eventspersec=eventspersec_rows(),
         multitenant=multitenant_rows(

@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
 # Reproduce the full PR gate locally with one command:
 #
-#   1. tier-1 pytest        (the suite every PR must keep green)
+#   1. tier-1 pytest        (the suite every PR must keep green; includes
+#                            the seeded fault sweep in tests/test_faults.py —
+#                            conservation + cross-core bit parity under
+#                            injected crashes/losses/stragglers; --fast keeps
+#                            its 6-config prefix and skips the 114-config bulk)
 #   2. check_docs.py        (public-API docstring lint for repro.core)
 #   3. perf marker          (pytest -m perf -> scripts/check_perf.py:
 #                            reduced benchmark vs committed BENCH_pipeline.json,

@@ -76,6 +76,10 @@ class EdgeNode:
         self.pending: deque = deque()
         self.engine_busy = False
         self.tx_free_ms = 0.0
+        # fault layer (core.faults): bumped on every transient crash; an
+        # execution started under an older epoch is killed — its
+        # completion event must not touch node state
+        self.crash_epoch = 0
         # tenancy: cumulative execution time charged per tenant (the
         # engine attributes every execution to the owning tenant, so a
         # shared node's capacity split across models is observable)

@@ -223,7 +223,6 @@ class ModelDeployer:
         committed_mb: Dict[str, float] = {}
         for i, d in list(self.deployments.items()):
             if d.active and d.node_id == node_id:
-                self.undeploy(i)
                 stats = self.monitor.online_stats()
                 mem_req = self._mem_req_mb(d.partition)
                 eligible = [
@@ -231,7 +230,13 @@ class ModelDeployer:
                     if s.mem_avail_mb - committed_mb.get(s.node_id, 0.0)
                     >= mem_req and s.cpu_avail > 0]
                 if not eligible:
+                    # raise BEFORE undeploying: the record must survive a
+                    # failed repair so a later attempt (e.g. after a node
+                    # restart) still sees the partition — dropping it
+                    # first left the deployer with a permanently
+                    # incomplete assignment
                     raise RuntimeError("no capacity to redeploy partition %d" % i)
+                self.undeploy(i)
                 new_node = max(eligible,
                                key=lambda s: (s.capability, s.node_id)).node_id
                 committed_mb[new_node] = (committed_mb.get(new_node, 0.0)

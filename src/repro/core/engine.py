@@ -108,6 +108,7 @@ from repro.core.adaptation import ScenarioEvent, apply_scenario_event
 from repro.core.cost_model import (execution_ms_cached, link_rate_bits_per_ms,
                                    transfer_ms_cached)
 from repro.core.fabric import FairShareFabric
+from repro.core.faults import FaultConfig, account_stream_deaths
 from repro.core.monitor import POLL_INTERVAL_MS
 from repro.core.pipeline import RequestColumns, RunReport
 from repro.core.scheduler import SCHEDULING_OVERHEAD_MS
@@ -153,6 +154,13 @@ class EngineConfig:
     independent wheels (per-request columns and SLO metrics stay pinned;
     poll-tick *sampling* series may differ); ``shard_workers > 1``
     additionally forks that many worker processes.
+
+    ``faults`` attaches a :class:`core.faults.FaultConfig`: seeded
+    fault injection (crash/restart, transfer loss, execution failures,
+    stragglers) plus the retry/timeout/hedge/shed lifecycle, handled by
+    the shared ``core.faults.FaultRuntime`` in both cores. Requires the
+    isolated fabric (the shared-fabric flow state has no loss/requeue
+    semantics yet) and disables sharding and the eager fast path.
     """
     transfer: str = "legacy"
     micro_batch: int = 1
@@ -161,6 +169,7 @@ class EngineConfig:
     core: str = "fast"
     shards: str = "none"
     shard_workers: int = 0
+    faults: Optional[FaultConfig] = None
 
     def __post_init__(self):
         assert self.transfer in TRANSFER_MODES, self.transfer
@@ -169,6 +178,8 @@ class EngineConfig:
         assert self.core in ("fast", "heap"), self.core
         assert self.shards in ("none", "auto"), self.shards
         assert self.shard_workers >= 0, self.shard_workers
+        assert self.faults is None or self.fabric == "isolated", \
+            "fault injection requires the isolated fabric"
 
 
 class StageEntry:
@@ -403,7 +414,8 @@ class PipelineEngine:
         assert concurrency >= 1, "in-flight window must be >= 1"
         cfg = config or EngineConfig()
         if (arrivals is None and cfg.transfer == "legacy"
-                and cfg.micro_batch == 1 and cfg.fabric == "isolated"):
+                and cfg.micro_batch == 1 and cfg.fabric == "isolated"
+                and cfg.faults is None):
             return self._run_fast(num_requests, name, repeat_rate, seed,
                                   concurrency, scenario)
         return self._run_events(num_requests, name, repeat_rate, seed,
@@ -416,7 +428,8 @@ class PipelineEngine:
                 leftover_events: Sequence[ScenarioEvent],
                 queue_depth: Optional[tuple] = None,
                 fabric_stats: Optional[dict] = None,
-                batch_hist: Optional[dict] = None) -> RunReport:
+                batch_hist: Optional[dict] = None,
+                fault_stats: Optional[dict] = None) -> RunReport:
         """Common end-of-run bookkeeping: advance the clock to the last
         finish, apply scenario events the stream never reached, then the
         per-stream tail (:meth:`_stream_report`). Single-stream epilogue;
@@ -428,13 +441,14 @@ class PipelineEngine:
         for ev in leftover_events:
             apply_scenario_event(p.cluster, ev)
         return self._stream_report(name, cols, total_net, queue_depth,
-                                   fabric_stats, batch_hist)
+                                   fabric_stats, batch_hist, fault_stats)
 
     def _stream_report(self, name: str, cols: RequestColumns,
                        total_net: float,
                        queue_depth: Optional[tuple] = None,
                        fabric_stats: Optional[dict] = None,
-                       batch_hist: Optional[dict] = None) -> RunReport:
+                       batch_hist: Optional[dict] = None,
+                       fault_stats: Optional[dict] = None) -> RunReport:
         """Per-stream tail of the run epilogue: flush the scheduler feed,
         prune drained stage tables, take the final forced poll, and
         aggregate the cluster-level Table-I columns (exactly the legacy
@@ -462,7 +476,7 @@ class PipelineEngine:
             adaptation=(p.controller.summary()
                         if p.controller is not None else None),
             queue_depth=queue_depth, fabric_stats=fabric_stats,
-            batch_hist=batch_hist,
+            batch_hist=batch_hist, fault_stats=fault_stats,
         )
 
     # --- fast path: legacy transfer semantics, eager per-submit walk ----------
@@ -596,7 +610,8 @@ class PipelineEngine:
             queue_depth=(np.asarray(stream.qd_t, dtype=np.float64),
                          np.asarray(stream.qd_n, dtype=np.int64)),
             fabric_stats=fabric.stats() if fabric is not None else None,
-            batch_hist=dict(sorted(stream.bhist.items())))
+            batch_hist=dict(sorted(stream.bhist.items())),
+            fault_stats=stream.fstats)
 
 
 class _Stream:
@@ -611,7 +626,7 @@ class _Stream:
                  "tenant_name", "rng", "pattern_pool", "cols", "comm",
                  "service", "hits", "sigs", "total_net", "done", "arrived",
                  "in_flight", "admit_q", "at_arr", "qd_t", "qd_n", "bhist",
-                 "last_rate_t", "last_arr", "last_done")
+                 "last_rate_t", "last_arr", "last_done", "fstats")
 
     def __init__(self, engine: "PipelineEngine", n: int, name: str,
                  repeat_rate: float, seed: int, concurrency: int,
@@ -650,6 +665,10 @@ class _Stream:
         self.last_rate_t = 0.0
         self.last_arr = 0
         self.last_done = 0
+        #: fault-lifecycle counters (``RunReport.fault_stats``): set by
+        #: ``FaultRuntime.finalize`` in fault mode, or by the cores'
+        #: death-accounting epilogue; None on fault-free clean runs
+        self.fstats: Optional[dict] = None
 
 
 def _committed_excluding(streams: Sequence["_Stream"],
@@ -748,6 +767,17 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
         node.engine_busy = False
         if node.tx_free_ms < t0:
             node.tx_free_ms = t0
+
+    fr = None
+    if cfg.faults is not None:
+        from repro.core.faults import FaultRuntime
+
+        def _fault_push(at: float, lane: int, pl) -> None:
+            heapq.heappush(heap, (at, lane, next(seq), pl))
+
+        fr = FaultRuntime(cluster, streams, cfg, _fault_push,
+                          arbiter=arbiter)
+        fr.begin(t0)
 
     def try_start(node, now: float) -> None:
         # deliberately no node.online check: queued items were admitted
@@ -855,11 +885,19 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
             try_start(node, t)
 
     nev = 0
-    while heap and done_total < total_n:
+    deaths = False      # scenario "offline" seen (fault-free accounting)
+    while heap and (done_total if fr is None else fr.terminated) < total_n:
         t, prio, _, payload = heapq.heappop(heap)
         nev += 1
         if t > clock.now_ms:
             clock.now_ms = t
+
+        if fr is not None and prio != _P_POLL:
+            # fault mode: the shared lifecycle runtime handles every
+            # request-path event (poll ticks stay per-core — the compact
+            # and object paths are already parity-proven)
+            fr.dispatch(prio, t, payload)
+            continue
 
         if prio == _P_SUBMIT:
             s, r = payload
@@ -1073,6 +1111,8 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
                                       next(seq), None))
 
         else:                          # _P_SCENARIO
+            if payload.action == "offline":
+                deaths = True
             apply_scenario_event(cluster, payload)
             dead = [s for s in streams
                     if not s.engine._placement_alive()]
@@ -1091,20 +1131,33 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
                 # later submit (or recovery event) retries via
                 # _ensure_placement_alive before routing new requests
 
-    # conservation: every request that arrived must have completed (the
-    # engine drains in-flight and admission-queued work before exiting)
-    for s in streams:
-        if s.done < s.n:
-            raise RuntimeError(
-                f"engine drained its event heap with {s.done}/{s.n} "
-                f"completions for stream {s.name!r} — "
-                f"{s.arrived - s.done} request(s) lost in flight")
+    if fr is not None:
+        # fault mode: stranded requests are accounted (``stranded``
+        # failures) and the done/shed/failed partition is asserted
+        fr.finalize(clock.now_ms)
+    else:
+        # conservation: every request that arrived must have completed
+        # (the engine drains in-flight and admission-queued work before
+        # exiting) — unless a scenario death took nodes down with work
+        # queued on them, in which case the stranded requests are
+        # accounted as failed instead of crashing the whole run
+        for s in streams:
+            if s.done < s.n:
+                if not deaths:
+                    raise RuntimeError(
+                        f"engine drained its event heap with {s.done}/"
+                        f"{s.n} completions for stream {s.name!r} — "
+                        f"{s.arrived - s.done} request(s) lost in flight")
+                account_stream_deaths(s, clock.now_ms)
 
     global LAST_EVENT_COUNT
     LAST_EVENT_COUNT = nev
 
-    # scenario events past the stream's end still take effect
-    leftover = sorted((pl for _, pr, _, pl in heap if pr == _P_SCENARIO),
+    # scenario events past the stream's end still take effect (fault-mode
+    # crash/restart/timeout chains also ride this lane — skip them)
+    leftover = sorted((pl for _, pr, _, pl in heap
+                       if pr == _P_SCENARIO
+                       and isinstance(pl, ScenarioEvent)),
                       key=lambda e: e.at_ms)
     for s in streams:
         s.cols.comm_ms[:] = s.comm
@@ -1165,5 +1218,6 @@ class MultiTenantEngine:
                     # would silently edit every other's)
                     fabric_stats=dict(fstats) if fstats is not None
                     else None,
-                    batch_hist=dict(sorted(s.bhist.items())))
+                    batch_hist=dict(sorted(s.bhist.items())),
+                    fault_stats=s.fstats)
                 for t, s in zip(self.tenants, streams)}

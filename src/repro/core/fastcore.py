@@ -72,9 +72,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import engine as _eng
-from repro.core.adaptation import apply_scenario_event
+from repro.core.adaptation import ScenarioEvent, apply_scenario_event
 from repro.core.cost_model import link_rate_bits_per_ms
 from repro.core.fabric import FairShareFabric
+from repro.core.faults import account_stream_deaths
 from repro.core import monitor as _mon
 from repro.core.monitor import POLL_INTERVAL_MS
 from repro.core.scheduler import SCHEDULING_OVERHEAD_MS
@@ -155,6 +156,17 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
         node.engine_busy = False
         if node.tx_free_ms < t0:
             node.tx_free_ms = t0
+
+    # fault mode: the shared FaultRuntime takes over every non-poll event
+    # (same code object as the oracle's fault path — faulted parity by
+    # construction); POLL stays on this core's compact/object tick
+    fr = None
+    if cfg.faults is not None:
+        from repro.core.faults import FaultRuntime
+        fr = FaultRuntime(cluster, streams, cfg,
+                          lambda at, lane, pl: wheel.push(at, lane, pl),
+                          arbiter=arbiter)
+        fr.begin(t0)
 
     def try_start(node, now: float) -> None:
         # oracle's try_start verbatim, pushing CDONE to the wheel
@@ -369,11 +381,16 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
             idx = st.next_index
             tnow = nxt_t
 
-    while wheel and done_total < total_n:
+    deaths = False      # scenario "offline" seen (fault-free accounting)
+    while wheel and (done_total if fr is None else fr.terminated) < total_n:
         t, prio, _, payload = wheel.pop()
         nev += 1
         if t > clock.now_ms:
             clock.now_ms = t
+
+        if fr is not None and prio != P_POLL:
+            fr.dispatch(prio, t, payload)
+            continue
 
         if prio == P_SUBMIT:
             s, r = payload
@@ -575,6 +592,8 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                 wheel.push(t + POLL_INTERVAL_MS, P_POLL, None)
 
         else:                              # P_SCENARIO
+            if payload.action == "offline":
+                deaths = True
             apply_scenario_event(cluster, payload)
             dead = [s for s in streams
                     if not s.engine._placement_alive()]
@@ -590,19 +609,30 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                             s.controller.on_engine_event("scenario",
                                                          force_poll=True)
 
-    for s in streams:
-        if s.done < s.n:
-            raise RuntimeError(
-                f"engine drained its event wheel with {s.done}/{s.n} "
-                f"completions for stream {s.name!r} — "
-                f"{s.arrived - s.done} request(s) lost in flight")
-
-    leftover = sorted((pl for _, pr, _, pl in wheel if pr == P_SCENARIO),
-                      key=lambda e: e.at_ms)
+    # columns first: fault-mode finalize and the death accounting below
+    # both read/patch the written-back columns (mirrors the oracle, whose
+    # columns are live arrays throughout)
     for s in streams:
         s.cols.comm_ms[:] = s.comm
         s.cols.service_ms[:] = s.service
         s.cols.cache_hits[:] = s.hits
+
+    if fr is not None:
+        fr.finalize(clock.now_ms)
+    else:
+        for s in streams:
+            if s.done < s.n:
+                if not deaths:
+                    raise RuntimeError(
+                        f"engine drained its event wheel with {s.done}/"
+                        f"{s.n} completions for stream {s.name!r} — "
+                        f"{s.arrived - s.done} request(s) lost in flight")
+                account_stream_deaths(s, clock.now_ms)
+
+    leftover = sorted((pl for _, pr, _, pl in wheel
+                       if pr == P_SCENARIO
+                       and isinstance(pl, ScenarioEvent)),
+                      key=lambda e: e.at_ms)
     return leftover, fabric, nev
 
 
@@ -627,6 +657,10 @@ def _shardable(streams: Sequence, cfg, scenario, arbiter) -> Optional[List[List]
     if cfg.shards != "auto" or arbiter is not None or scenario:
         return None
     if cfg.fabric != "isolated":
+        return None
+    if cfg.faults is not None:
+        # fault mode: one RNG + crash chains couple every stream's
+        # timeline through shared node state — never shard
         return None
     if any(s.controller is not None for s in streams):
         return None
@@ -672,7 +706,8 @@ def _group_state(cluster, group: Sequence, log: list, nev: int) -> dict:
         return dict(
             cols={f: getattr(s.cols, f) for f in
                   ("arrival_ms", "submit_ms", "finish_ms", "comm_ms",
-                   "service_ms", "cache_hits", "stages")},
+                   "service_ms", "cache_hits", "stages", "retries",
+                   "hedges", "status")},
             comm=s.comm, service=s.service, hits=s.hits, sigs=s.sigs,
             total_net=s.total_net, done=s.done, arrived=s.arrived,
             in_flight=s.in_flight, qd_t=s.qd_t, qd_n=s.qd_n,

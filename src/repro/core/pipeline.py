@@ -58,6 +58,9 @@ class RequestMetrics:
     stages: int
     service_ms: float = 0.0     # pure execution + comm time, no queueing
     arrival_ms: Optional[float] = None   # open-loop arrival (None: = submit)
+    retries: int = 0            # fault-mode re-dispatch attempts consumed
+    hedges: int = 0             # fault-mode hedged duplicates spawned
+    status: int = 0             # 0 done / 1 shed / 2 failed (core.faults)
 
     @property
     def latency_ms(self) -> float:
@@ -84,7 +87,8 @@ class RequestColumns:
     """
 
     __slots__ = ("submit_ms", "finish_ms", "comm_ms", "service_ms",
-                 "cache_hits", "stages", "arrival_ms")
+                 "cache_hits", "stages", "arrival_ms", "retries", "hedges",
+                 "status")
 
     def __init__(self, n: int):
         self.submit_ms = np.zeros(n, dtype=np.float64)
@@ -94,6 +98,11 @@ class RequestColumns:
         self.cache_hits = np.zeros(n, dtype=np.int64)
         self.stages = np.zeros(n, dtype=np.int64)
         self.arrival_ms = np.zeros(n, dtype=np.float64)
+        # fault-lifecycle columns (core.faults); all-zero on fault-free
+        # runs, so adding them cannot drift any pre-fault metric
+        self.retries = np.zeros(n, dtype=np.int64)
+        self.hedges = np.zeros(n, dtype=np.int64)
+        self.status = np.zeros(n, dtype=np.int64)
 
     def __len__(self) -> int:
         return len(self.submit_ms)
@@ -106,8 +115,11 @@ class RequestColumns:
         return self.finish_ms - self.arrival_ms
 
     def deadline_met(self, deadline_ms: float) -> np.ndarray:
-        """Per-request SLO flag: sojourn within ``deadline_ms``."""
-        return self.sojourn_ms <= deadline_ms
+        """Per-request SLO flag: sojourn within ``deadline_ms`` *and*
+        the request actually completed (shed/failed requests never count
+        toward goodput; on fault-free runs every status is 0, keeping
+        this bit-identical to the pre-fault predicate)."""
+        return (self.sojourn_ms <= deadline_ms) & (self.status == 0)
 
     def bitwise_equal(self, other: "RequestColumns") -> bool:
         """Exact (bit-for-bit, no tolerance) equality of every column —
@@ -136,6 +148,9 @@ class RequestColumns:
             cols.stages[i] = r.stages
             cols.arrival_ms[i] = (r.arrival_ms if r.arrival_ms is not None
                                   else r.submit_ms)
+            cols.retries[i] = r.retries
+            cols.hedges[i] = r.hedges
+            cols.status[i] = r.status
         return cols
 
     def materialize(self) -> List[RequestMetrics]:
@@ -146,7 +161,9 @@ class RequestColumns:
                                float(self.comm_ms[i]),
                                int(self.cache_hits[i]), int(self.stages[i]),
                                float(self.service_ms[i]),
-                               float(self.arrival_ms[i]))
+                               float(self.arrival_ms[i]),
+                               int(self.retries[i]), int(self.hedges[i]),
+                               int(self.status[i]))
                 for i in range(len(self.submit_ms))]
 
 
@@ -171,7 +188,8 @@ class RunReport:
                  adaptation: Optional[dict] = None,
                  queue_depth: Optional[tuple] = None,
                  fabric_stats: Optional[dict] = None,
-                 batch_hist: Optional[dict] = None):
+                 batch_hist: Optional[dict] = None,
+                 fault_stats: Optional[dict] = None):
         assert requests is not None or columns is not None
         self.name = name
         self._requests = requests
@@ -189,6 +207,10 @@ class RunReport:
         self.queue_depth = queue_depth
         self.fabric_stats = fabric_stats   # FairShareFabric.stats()
         self.batch_hist = batch_hist       # micro-batch size -> count
+        #: fault-mode lifecycle counters (``core.faults``): injected
+        #: fault counts, retries/hedges/shed/failed, availability —
+        #: None on fault-free runs
+        self.fault_stats = fault_stats
 
     @property
     def requests(self) -> List[RequestMetrics]:
@@ -307,8 +329,43 @@ class RunReport:
         hits = int(c.deadline_met(deadline_ms).sum())
         return 1000.0 * hits / max(span, 1e-9)
 
+    # --- fault-lifecycle metrics (core.faults) --------------------------------
+
+    @property
+    def done_count(self) -> int:
+        """Requests that completed successfully (status 0)."""
+        return int(np.count_nonzero(self.columns.status == 0))
+
+    @property
+    def shed_count(self) -> int:
+        """Requests shed by deadline-aware admission control (status 1)."""
+        return int(np.count_nonzero(self.columns.status == 1))
+
+    @property
+    def failed_count(self) -> int:
+        """Requests that exhausted their retries (status 2);
+        ``fault_stats['failed_reasons']`` breaks these down by cause."""
+        return int(np.count_nonzero(self.columns.status == 2))
+
+    @property
+    def availability(self) -> float:
+        """Fraction of the stream that completed successfully —
+        done / (done + shed + failed). 1.0 on fault-free runs."""
+        return self.done_count / max(len(self.columns), 1)
+
     def row(self) -> dict:
-        """Flatten the report into one benchmark-table row."""
+        """Flatten the report into one benchmark-table row. Fault-mode
+        runs (``fault_stats`` set) append the lifecycle columns; the key
+        set of fault-free rows is unchanged, so committed benchmark
+        baselines stay byte-identical."""
+        fs = self.fault_stats
+        extra = {} if fs is None else dict(
+            done=self.done_count, shed=self.shed_count,
+            failed=self.failed_count,
+            retries=int(self.columns.retries.sum()),
+            hedges=int(self.columns.hedges.sum()),
+            availability=round(self.availability, 4),
+        )
         return dict(
             config=self.name,
             latency_ms=round(self.steady_latency_ms, 2),   # paper's metric
@@ -323,6 +380,7 @@ class RunReport:
             stability=round(self.stability, 3),
             mem_mb=round(self.mem_used_mb, 3),
             cpu_pct=round(self.cpu_pct, 4),
+            **extra,
         )
 
 

@@ -150,6 +150,37 @@ class TaskScheduler:
             self.task_counts[best] = self.task_counts.get(best, 0) + 1
         return best
 
+    def select_alternate(self, nodes: List[NodeStats],
+                         exclude: tuple = (),
+                         req: Optional[TaskRequirements] = None,
+                         eligible=None) -> Optional[str]:
+        """Failure-path re-score (Alg. 1 over the survivors): the
+        highest-scoring node not in ``exclude`` that passes the caller's
+        ``eligible`` predicate (e.g. engine-idle right now). Used by the
+        fault layer (``core.faults``) to pick the target of a retry
+        re-dispatch or a hedged duplicate. Charges the same 10 ms
+        decision overhead and winner queue-count bump as
+        :meth:`select_node` — a recovery dispatch is a scheduling
+        decision like any other."""
+        req = req or TaskRequirements()
+        self.decisions += 1
+        self.overhead_ms += SCHEDULING_OVERHEAD_MS
+        best, best_score = None, 0.0
+        for s in self.score_nodes(nodes, req):
+            if s.skipped is not None:
+                self.skip_counts[s.skipped] = (
+                    self.skip_counts.get(s.skipped, 0) + 1)
+                continue
+            if s.node_id in exclude:
+                continue
+            if eligible is not None and not eligible(s.node_id):
+                continue
+            if s.total > best_score:
+                best, best_score = s.node_id, s.total
+        if best is not None:
+            self.task_counts[best] = self.task_counts.get(best, 0) + 1
+        return best
+
     def select_node_compact(self, nodes, req: Optional[TaskRequirements]
                             = None) -> Optional[str]:
         """:meth:`select_node` over *live online* ``EdgeNode`` objects —

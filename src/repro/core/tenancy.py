@@ -59,7 +59,9 @@ class TenantTraffic:
     mode); an ``ArrivalProcess`` makes the tenant open-loop. ``weight`` is
     the tenant's relative offered load, used by the multi-tenant planner
     to scale that tenant's per-node time budget (a 2x-rate tenant loads a
-    node twice as much per deployed stage).
+    node twice as much per deployed stage). ``retry_budget`` caps this
+    tenant's total fault-mode retries (``core.faults``); None defers to
+    the run's ``FaultConfig.retry_budget``.
     """
     num_requests: int = 100
     arrivals: Optional[ArrivalProcess] = None
@@ -68,6 +70,7 @@ class TenantTraffic:
     seed: int = 0
     deadline_ms: float = 2000.0
     weight: float = 1.0
+    retry_budget: Optional[int] = None
 
 
 class Tenant:
