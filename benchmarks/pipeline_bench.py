@@ -2,7 +2,7 @@
 micro-batching, open-loop traffic, multi-tenant serving, and a Table-I
 drift guard.
 
-Five sections, written to ``BENCH_pipeline.json`` (repo root):
+The sections, written to ``BENCH_pipeline.json`` (repo root):
 
 ``table1``
     The paper's Table-I configurations (monolithic / AMP4EC / AMP4EC+Cache
@@ -47,6 +47,14 @@ Five sections, written to ``BENCH_pipeline.json`` (repo root):
     tenant sharding. Reports events-per-wall-second per row and asserts
     the sharded core's ≥10× events/sec speedup over the heap oracle
     in-bench (the ISSUE-7 acceptance bar).
+``dagsweep``
+    Operator-DAG dataflow: an MoE-style branched plan (trunk → two
+    asymmetric expert arms → join → tail) with a trunk early-exit head
+    draining half the requests, reported with per-exit-head goodput, and
+    a two-model cascade (cheap branched model escalating its exit misses
+    into a MobileNetV2 tenant) against serving every request on the
+    expensive model alone — the cascade must win on end-to-end goodput
+    (asserted in-bench, committed numbers pinned exactly).
 ``multitenant``
     The tenancy layer at scale and under arbitration. (a) 3 tenants ×
     20 nodes × 10k open-loop requests each through one shared event heap
@@ -575,6 +583,94 @@ def eventspersec_rows():
     return rows
 
 
+# --- operator-DAG dataflow ----------------------------------------------------
+
+#: the dagsweep scenario: an MoE-style branched plan (trunk -> 2 asymmetric
+#: expert arms -> join -> tail) whose trunk head early-exits half the
+#: requests, and a two-model cascade where the cheap branched model
+#: escalates its misses into a MobileNetV2 tenant
+DAG_REQUESTS = 400
+DAG_SEED = 29
+DAG_DEADLINE_MS = 2000.0
+DAG_EXIT_PROB = 0.5
+CASCADE_REQUESTS = 300
+CASCADE_DEADLINE_MS = 2000.0
+
+
+def dagsweep_rows(num_requests: int = DAG_REQUESTS):
+    """Branched early-exit plans through the DAG planner + engine
+    (per-exit-head goodput reported per row), then the model cascade vs
+    serving every request on the expensive model alone — the cascade
+    must win on end-to-end goodput (asserted here, so the committed
+    numbers are load-bearing). Fully deterministic: closed-loop streams
+    and seeded per-request exit draws."""
+    from repro.core.tenancy import TenantRegistry, TenantTraffic
+    from repro.models.graph import branched_graph
+
+    rows = []
+    g = branched_graph(exit_prob=DAG_EXIT_PROB)
+    for label, cfg in (
+            ("dag-branched-exit", None),
+            ("dag-branched-exit-overlap+mb4",
+             EngineConfig(transfer="overlap", micro_batch=4))):
+        d = DistributedInference(make_paper_cluster(), ModelPartitioner(g),
+                                 method="planner")
+        rep = d.run(num_requests, name=label, seed=DAG_SEED, concurrency=8,
+                    engine=cfg)
+        row = rep.row()
+        row["goodput_by_exit"] = {
+            ("tail" if h < 0 else str(h)): round(v, 4)
+            for h, v in sorted(rep.goodput_by_exit(DAG_DEADLINE_MS).items())}
+        rows.append(row)
+
+    # cascade vs expensive-only: identical request count; the cascade's
+    # end-to-end latency of an escalated request spans cheap submit ->
+    # big finish (escalations enter the big tenant in cheap-finish order,
+    # so the positional match below is exact)
+    gm = mobilenetv2_graph()
+    reg = TenantRegistry(make_paper_cluster())
+    reg.add("cheap", ModelPartitioner(branched_graph(exit_prob=DAG_EXIT_PROB)),
+            traffic=TenantTraffic(num_requests=CASCADE_REQUESTS, seed=DAG_SEED,
+                                  concurrency=8, escalate_to="big"),
+            num_partitions=3, method="planner")
+    reg.add("big", ModelPartitioner(gm),
+            traffic=TenantTraffic(num_requests=CASCADE_REQUESTS, seed=DAG_SEED,
+                                  concurrency=8),
+            num_partitions=3, method="planner")
+    res = reg.run(name="cascade")
+    cheap, big = res.reports["cheap"], res.reports["big"]
+    miss = cheap.columns.exit_head == -1
+    order = np.argsort(cheap.columns.finish_ms[miss], kind="stable")
+    start = np.concatenate([cheap.columns.submit_ms[~miss],
+                            cheap.columns.submit_ms[miss][order]])
+    finish = np.concatenate([cheap.columns.finish_ms[~miss],
+                             big.columns.finish_ms])
+    span_s = (float(finish.max()) - float(start.min())) / 1e3
+    met = int(((finish - start) <= CASCADE_DEADLINE_MS).sum())
+    cascade_goodput = met / span_s
+    rows.append(dict(
+        config="cascade-cheap->big",
+        num_requests=CASCADE_REQUESTS,
+        escalated=int(miss.sum()),
+        exit_rate=round(float((~miss).mean()), 4),
+        goodput_rps=round(cascade_goodput, 4),
+        p99_end_to_end_ms=round(float(np.percentile(finish - start, 99)), 2),
+    ))
+
+    d = DistributedInference(make_paper_cluster(), ModelPartitioner(gm),
+                             method="planner")
+    rep = d.run(CASCADE_REQUESTS, name="big-only-baseline", seed=DAG_SEED,
+                concurrency=8)
+    baseline_goodput = rep.goodput_rps(CASCADE_DEADLINE_MS)
+    row = rep.row()
+    row["goodput_rps"] = round(baseline_goodput, 4)
+    rows.append(row)
+    assert cascade_goodput > baseline_goodput, (
+        "the cascade must beat serving everything on the expensive model: "
+        f"{cascade_goodput:.3f} vs {baseline_goodput:.3f} rps")
+    return rows
+
+
 # --- multi-tenant serving -----------------------------------------------------
 
 #: the tenancy scale row: 3 tenants × 20 nodes × 10k open-loop requests
@@ -706,6 +802,7 @@ def run(scale_requests: int = 100_000, write: bool = True,
         openloop=openloop_rows(),
         batchcurve=batchcurve_rows(),
         faultstorm=faultstorm_rows(),
+        dagsweep=dagsweep_rows(),
         scale=scale_rows(scale_requests, budget_s=budget_s),
         eventspersec=eventspersec_rows(),
         multitenant=multitenant_rows(

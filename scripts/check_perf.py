@@ -49,7 +49,8 @@ REDUCED_SCALE_REQUESTS = 20_000
 #: current wall rate must be >= this fraction of the committed baseline
 WALL_RATE_TOLERANCE = 0.25
 #: sections whose rows are bit-reproducible and compared key-exactly
-EXACT_SECTIONS = ("table1", "modes", "openloop", "batchcurve", "faultstorm")
+EXACT_SECTIONS = ("table1", "modes", "openloop", "batchcurve", "faultstorm",
+                  "dagsweep")
 #: scale-section fields that depend on stream length or wall clock — not
 #: compared exactly (the wall rate has its own tolerance band above)
 SCALE_VOLATILE_FIELDS = {"num_requests", "wall_s", "sim_req_per_wall_s",

@@ -4,14 +4,18 @@
 #   1. tier-1 pytest        (the suite every PR must keep green; includes
 #                            the seeded fault sweep in tests/test_faults.py —
 #                            conservation + cross-core bit parity under
-#                            injected crashes/losses/stragglers; --fast keeps
-#                            its 6-config prefix and skips the 114-config bulk)
+#                            injected crashes/losses/stragglers — and the
+#                            DAG chain-equivalence sweep in tests/test_dag.py;
+#                            --fast keeps each suite's tier-1 prefix and
+#                            skips the slow-marked bulk sweeps)
 #   2. check_docs.py        (public-API docstring lint for repro.core)
 #   3. perf marker          (pytest -m perf -> scripts/check_perf.py:
 #                            reduced benchmark vs committed BENCH_pipeline.json,
 #                            including the multitenant section — 3-tenant
 #                            shared-heap scale row + the arbitration-beats-
-#                            independent-replanning goodput comparison)
+#                            independent-replanning goodput comparison — and
+#                            the dagsweep section: branched early-exit plans
+#                            + the cascade-beats-expensive-only assertion)
 #
 # Usage:  scripts/run_checks.sh [--skip-perf|--fast]
 #   --skip-perf  run only the tier-1 + docs gates; the perf gate

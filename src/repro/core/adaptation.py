@@ -333,6 +333,10 @@ class AdaptationController:
         beyond that — so re-planning stays sub-second at 50+ nodes where
         PR 1's permutation scoring was intractable. Node capabilities come
         from the live snapshots, de-rated by scheduler execution history.
+        On a DAG graph the same DP runs over topological cuts (the
+        planner's reach-weighted stage/edge matrices), and
+        ``plan_from_cuts`` rebuilds the stage DAG — migration candidates
+        are DAG stage sets with no controller-side special casing.
         """
         views = node_views_from_stats(stats, self.cluster,
                                       scheduler=self.pipeline.scheduler)

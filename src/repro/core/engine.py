@@ -190,7 +190,8 @@ class StageEntry:
 
     __slots__ = ("index", "node", "exec_ms", "xfer_ms", "out_bytes",
                  "recv_node", "key_prefix", "cache_value", "next_index",
-                 "pending_execs", "queued", "_part", "_table", "_exec_k",
+                 "pending_execs", "queued", "succs", "pred_count",
+                 "exit_heads", "_part", "_table", "_exec_k",
                  "_xfer_k", "_curve")
 
     def __init__(self, table: "StageTable", part, node, recv_node):
@@ -223,6 +224,11 @@ class StageEntry:
         self.next_index = part.index + 1 if recv_node is not None else None
         self.pending_execs = 0                # scheduler feed since last poll
         self.queued = 0                       # this stage's queued backlog
+        # DAG-plan fields, overwritten by StageTable for DAG tables; the
+        # chain defaults keep every chain-path handler on its original code
+        self.succs: Optional[tuple] = None    # outgoing EdgeEntry fan-out
+        self.pred_count = 1                   # join arity (>1 == join stage)
+        self.exit_heads: Optional[tuple] = None  # ((layer_id, prob), ...)
         self._exec_k: Dict[int, float] = {}
         self._xfer_k: Dict[int, float] = {}
 
@@ -250,6 +256,36 @@ class StageEntry:
     def xfer_for(self, k: int) -> float:
         """Boundary-transfer time of a k-request coalesced activation
         message (one per-message latency, k× the payload bytes)."""
+        if k == 1:
+            return self.xfer_ms
+        v = self._xfer_k.get(k)
+        if v is None:
+            v = transfer_ms_cached(self.out_bytes * k,
+                                   self.recv_node.profile)
+            self._xfer_k[k] = v
+        return v
+
+
+class EdgeEntry:
+    """One outgoing stage-DAG edge of a DAG :class:`StageEntry`: the
+    successor stage index, the coalesced boundary payload, the receiving
+    node, and the k=1 transfer time — the per-edge analogue of the chain
+    entry's ``recv_node`` / ``out_bytes`` / ``xfer_ms`` triple."""
+
+    __slots__ = ("next_index", "out_bytes", "recv_node", "xfer_ms",
+                 "_xfer_k")
+
+    def __init__(self, next_index: int, bytes_per_req: int, batch: int,
+                 recv_node):
+        self.next_index = next_index
+        self.out_bytes = bytes_per_req * batch
+        self.recv_node = recv_node
+        self.xfer_ms = transfer_ms_cached(self.out_bytes, recv_node.profile)
+        self._xfer_k: Dict[int, float] = {}
+
+    def xfer_for(self, k: int) -> float:
+        """Transfer time of a k-request coalesced message on this edge
+        (one per-message latency, k× the payload bytes)."""
         if k == 1:
             return self.xfer_ms
         v = self._xfer_k.get(k)
@@ -289,6 +325,20 @@ class StageTable:
                        (nodes[self.placement_src[part.index + 1]]
                         if part.index < last else None))
             for part in parts]
+        #: True for linear plans — the fast core fuses only chain tables,
+        #: and every DAG-only handler branch keys off ``succs is not None``
+        self.chain = self.plan.stage_dag is None
+        if not self.chain:
+            dag = self.plan.stage_dag
+            for st, edges, pc, heads in zip(self.stages, dag.succs,
+                                            dag.pred_counts,
+                                            dag.exit_heads):
+                st.succs = tuple(
+                    EdgeEntry(si, eb, self.batch,
+                              nodes[self.placement_src[si]])
+                    for si, eb in edges)
+                st.pred_count = pc
+                st.exit_heads = heads if heads else None
 
 
 class PipelineEngine:
@@ -415,7 +465,8 @@ class PipelineEngine:
         cfg = config or EngineConfig()
         if (arrivals is None and cfg.transfer == "legacy"
                 and cfg.micro_batch == 1 and cfg.fabric == "isolated"
-                and cfg.faults is None):
+                and cfg.faults is None
+                and self.pipe.partitioner.graph.is_chain):
             return self._run_fast(num_requests, name, repeat_rate, seed,
                                   concurrency, scenario)
         return self._run_events(num_requests, name, repeat_rate, seed,
@@ -623,10 +674,11 @@ class _Stream:
 
     __slots__ = ("engine", "pipe", "name", "n", "repeat_rate", "concurrency",
                  "arrivals", "controller", "monitor", "scheduler", "cache",
-                 "tenant_name", "rng", "pattern_pool", "cols", "comm",
+                 "tenant_name", "seed", "rng", "pattern_pool", "cols", "comm",
                  "service", "hits", "sigs", "total_net", "done", "arrived",
                  "in_flight", "admit_q", "at_arr", "qd_t", "qd_n", "bhist",
-                 "last_rate_t", "last_arr", "last_done", "fstats")
+                 "last_rate_t", "last_arr", "last_done", "fstats", "joins",
+                 "escalate_to", "dynamic", "next_r")
 
     def __init__(self, engine: "PipelineEngine", n: int, name: str,
                  repeat_rate: float, seed: int, concurrency: int,
@@ -646,6 +698,7 @@ class _Stream:
         self.scheduler = p.scheduler
         self.cache = p.cache
         self.tenant_name = p.tenant.name
+        self.seed = seed             # exit-head draws key off the raw seed
         self.rng = np.random.default_rng(seed)
         self.pattern_pool = [f"pattern-{i}" for i in range(8)]
         self.cols = RequestColumns(n)
@@ -669,6 +722,14 @@ class _Stream:
         #: ``FaultRuntime.finalize`` in fault mode, or by the cores'
         #: death-accounting epilogue; None on fault-free clean runs
         self.fstats: Optional[dict] = None
+        # DAG/cascade state: in-flight join counters keyed (stage, r); a
+        # cascade source's target stream; whether this stream is itself a
+        # cascade target (fed by escalation, not seeded submits) and how
+        # many requests have been escalated into it so far
+        self.joins: Dict[tuple, int] = {}
+        self.escalate_to: Optional["_Stream"] = None
+        self.dynamic = False
+        self.next_r = 0
 
 
 def _committed_excluding(streams: Sequence["_Stream"],
@@ -687,6 +748,137 @@ def _committed_excluding(streams: Sequence["_Stream"],
 #: ``fastcore.LAST_EVENT_COUNT``, and a parity pair of runs reports equal
 #: counts — fused chain steps are counted as the heap pops they replace
 LAST_EVENT_COUNT = 0
+
+
+def _exit_draw(seed: int, r: int, exit_heads) -> int:
+    """Seeded per-request early-exit decision: walk the stage's exit
+    heads in layer order drawing one uniform per (stream seed, request,
+    head layer), return the first head whose draw lands under its exit
+    probability, or -1 to continue. ``SeedSequence``-keyed so the outcome
+    is a pure function of identity — independent of event order, core,
+    micro-batching, or sharding (the exit-rate determinism property the
+    DAG suite pins)."""
+    for head, prob in exit_heads:
+        u = np.random.SeedSequence((seed, r, head)).generate_state(1)[0]
+        if u / 4294967296.0 < prob:
+            return head
+    return -1
+
+
+def _check_dag_streams(streams: Sequence["_Stream"], cfg) -> None:
+    """Reject engine features the DAG/cascade dataflow has no semantics
+    for: shared-fabric flow state and the fault lifecycle are chain-only
+    (their payloads carry single-successor routing), and the per-stage
+    result cache cannot short-circuit across a join. Chain streams pass
+    untouched, so this never constrains an existing configuration."""
+    for s in streams:
+        dag = not s.pipe.partitioner.graph.is_chain
+        if not (dag or s.escalate_to is not None or s.dynamic):
+            continue
+        what = "a DAG plan" if dag else "a cascade stream"
+        if cfg.fabric != "isolated":
+            raise ValueError(f"{what} requires the isolated fabric")
+        if cfg.faults is not None:
+            raise ValueError(f"fault injection is not supported with {what}")
+        if dag and s.cache is not None:
+            raise ValueError("result caching is not supported on DAG plans")
+
+
+def _dag_cdone(node, st, batch: List[int], t: float, mode: str, s,
+               push, finish_request, try_start) -> None:
+    """Completion continuation of a DAG stage (both cores dispatch here,
+    so DAG runs are core-parity by construction): draw the stage's exit
+    heads per request, finish early-exiters and — on a terminal stage —
+    the survivors, then forward one coalesced message per outgoing edge
+    under the run's transfer model. A join target releases only once all
+    predecessor messages arrive (``route``'s pred-count gate)."""
+    survivors = batch
+    if st.exit_heads is not None:
+        survivors = []
+        for r in batch:
+            h = _exit_draw(s.seed, r, st.exit_heads)
+            if h >= 0:
+                s.cols.exit_head[r] = h
+                finish_request(s, r, t)
+            else:
+                survivors.append(r)
+    ks = len(survivors)
+    if not st.succs or ks == 0:
+        node.engine_busy = False
+        for r in survivors:
+            finish_request(s, r, t)
+        try_start(node, t)
+        return
+    tbl = st._table
+    if mode == "serial":
+        # synchronous sends: the node stays blocked while each edge's
+        # message is delivered back-to-back (engine_busy clears at SDONE)
+        tt = t
+        for e in st.succs:
+            ob = e.out_bytes * ks
+            tm = e.xfer_for(ks)
+            node.net_tx_bytes += ob
+            e.recv_node.net_rx_bytes += ob
+            s.total_net += ob
+            for r in survivors:
+                s.comm[r] += tm
+                s.service[r] += tm
+            tt = tt + tm
+            push(tt, _P_ARRIVE, (tbl, e.next_index, list(survivors)))
+        node.busy_until_ms = tt
+        push(tt, _P_SDONE, node)
+        return
+    node.engine_busy = False
+    if mode == "overlap":
+        # async tx FIFO: the branch's messages queue behind each other on
+        # the sender's link while the node starts its next compute
+        sx = node.tx_free_ms
+        if t > sx:
+            sx = t
+        for e in st.succs:
+            ob = e.out_bytes * ks
+            tm = e.xfer_for(ks)
+            node.net_tx_bytes += ob
+            e.recv_node.net_rx_bytes += ob
+            s.total_net += ob
+            for r in survivors:
+                s.comm[r] += tm
+                s.service[r] += tm
+            push(sx + tm, _P_ARRIVE, (tbl, e.next_index, list(survivors)))
+            sx = sx + tm
+        node.tx_free_ms = sx
+    else:                             # legacy: latency-only transfers
+        for e in st.succs:
+            ob = e.out_bytes * ks
+            tm = e.xfer_for(ks)
+            node.net_tx_bytes += ob
+            e.recv_node.net_rx_bytes += ob
+            s.total_net += ob
+            for r in survivors:
+                s.comm[r] += tm
+                s.service[r] += tm
+            push(t + tm, _P_ARRIVE, (tbl, e.next_index, list(survivors)))
+    try_start(node, t)
+
+
+def _trim_dynamic(streams: Sequence["_Stream"]) -> None:
+    """Cut every cascade target's preallocated run state down to the
+    requests actually escalated into it (its ``num_requests`` is a
+    capacity, not a demand): metric columns, per-request accumulators,
+    and the conservation target ``n`` all shrink to ``next_r``."""
+    for s in streams:
+        if not s.dynamic or s.next_r == s.n:
+            continue
+        if s.next_r == 0:
+            raise RuntimeError(
+                f"cascade target stream {s.name!r} received no escalated "
+                "requests — every upstream request exited early")
+        s.cols = s.cols.head(s.next_r)
+        s.comm = s.comm[:s.next_r]
+        s.service = s.service[:s.next_r]
+        s.hits = s.hits[:s.next_r]
+        s.sigs = s.sigs[:s.next_r]
+        s.n = s.next_r
 
 
 def _dispatch_streams(cluster, streams: Sequence["_Stream"],
@@ -727,16 +919,22 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
     fabric = (FairShareFabric(shared_uplinks=cfg.fabric == "maxmin")
               if cfg.fabric in ("shared", "maxmin") else None)
     multi = len(streams) > 1
+    _check_dag_streams(streams, cfg)
     for s in streams:
         if s.controller is not None:
             # fresh per-stream traffic state; the adaptive flag lets the
             # controller derive the expected micro-batch it re-plans at
             s.controller.begin_stream(kmax, adaptive=adaptive)
     done_total = 0
-    total_n = sum(s.n for s in streams)
+    # cascade targets submit only via escalation, which grows total_n as
+    # misses arrive — their capacity n is not an up-front demand
+    total_n = sum(s.n for s in streams if not s.dynamic)
     t0 = clock.now_ms
     heap: list = []
     seq = itertools.count()
+
+    def _push(at: float, lane: int, pl) -> None:
+        heapq.heappush(heap, (at, lane, next(seq), pl))
 
     for ev in sorted(scenario or [], key=lambda e: e.at_ms):
         heapq.heappush(heap, (max(ev.at_ms, t0), _P_SCENARIO,
@@ -744,6 +942,8 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
     heapq.heappush(heap, (t0, _P_POLL, next(seq), None))
     for s in streams:
         s.last_rate_t = t0
+        if s.dynamic:
+            continue
         if s.arrivals is None:
             for r in range(min(s.concurrency, s.n)):
                 heapq.heappush(heap, (t0, _P_SUBMIT, next(seq), (s, r)))
@@ -830,14 +1030,27 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
                               (node, st, batch, dur)))
 
     def finish_request(s: "_Stream", r: int, t: float) -> None:
-        nonlocal done_total
+        nonlocal done_total, total_n
         s.cols.finish_ms[r] = t
         s.done += 1
         done_total += 1
+        tgt = s.escalate_to
+        if tgt is not None and s.cols.exit_head[r] == -1:
+            # cascade miss (reached the tail, no exit head fired):
+            # escalate into the expensive tenant's stream as its next
+            # request, submitted at this finish time
+            nr = tgt.next_r
+            assert nr < tgt.n, (
+                f"cascade target {tgt.name!r} capacity {tgt.n} exceeded")
+            tgt.next_r = nr + 1
+            total_n += 1
+            heapq.heappush(heap, (t, _P_SUBMIT, next(seq), (tgt, nr)))
         if s.arrivals is None:     # closed loop: r's finish submits r+W
-            nxt = r + s.concurrency
-            if nxt < s.n:
-                heapq.heappush(heap, (t, _P_SUBMIT, next(seq), (s, nxt)))
+            if not s.dynamic:      # cascade targets submit via escalation
+                nxt = r + s.concurrency
+                if nxt < s.n:
+                    heapq.heappush(heap, (t, _P_SUBMIT, next(seq),
+                                          (s, nxt)))
         else:                      # open loop: a slot frees; admit FIFO
             s.in_flight -= 1
             if s.admit_q:
@@ -853,6 +1066,19 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
         s = table.stream
         if s.cache is None:            # no per-request divergence: bulk
             st = table.stages[idx]
+            if st.pred_count > 1:      # join: release on last arrival
+                ready = []
+                for r in rs:
+                    key = (idx, r)
+                    c = s.joins.get(key, 0) + 1
+                    if c == st.pred_count:
+                        del s.joins[key]
+                        ready.append(r)
+                    else:
+                        s.joins[key] = c
+                rs = ready
+                if not rs:
+                    return
             pend = st.node.pending
             for r in rs:
                 pend.append((st, r))
@@ -943,6 +1169,10 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
                 for r in batch:
                     s.cache.put(st.key_prefix + (s.sigs[r],), st.cache_value,
                                 transfer_bytes=st.out_bytes)
+            if st.succs is not None:   # DAG stage: exits, fan-out, joins
+                _dag_cdone(node, st, batch, t, mode, s, _push,
+                           finish_request, try_start)
+                continue
             recv = st.recv_node
             if recv is None:
                 node.engine_busy = False
@@ -1131,6 +1361,7 @@ def _run_event_streams(cluster, streams: Sequence["_Stream"],
                 # later submit (or recovery event) retries via
                 # _ensure_placement_alive before routing new requests
 
+    _trim_dynamic(streams)
     if fr is not None:
         # fault mode: stranded requests are accounted (``stranded``
         # failures) and the done/shed/failed partition is asserted
@@ -1200,6 +1431,27 @@ class MultiTenantEngine:
             streams.append(_Stream(p._engine, tr.num_requests,
                                    f"{name}/{t.name}", tr.repeat_rate,
                                    tr.seed, tr.concurrency, tr.arrivals))
+        # model cascade: a tenant naming ``escalate_to`` feeds its misses
+        # (requests that reached its plan's tail without an exit head
+        # firing) into the target tenant's stream; the target becomes
+        # dynamic — its num_requests is a capacity, demand is escalation
+        by_name = {t.name: s for t, s in zip(self.tenants, streams)}
+        for t, s in zip(self.tenants, streams):
+            esc = t.traffic.escalate_to
+            if esc is None:
+                continue
+            assert esc in by_name, f"unknown cascade target tenant {esc!r}"
+            tgt = by_name[esc]
+            assert tgt is not s, "tenant cannot escalate to itself"
+            assert tgt.arrivals is None, \
+                "cascade target must be closed-loop (no arrival process)"
+            s.escalate_to = tgt
+            tgt.dynamic = True
+        for s in streams:
+            if s.escalate_to is not None and not s.dynamic:
+                assert s.escalate_to.n >= s.n, (
+                    f"cascade target {s.escalate_to.name!r} capacity "
+                    f"{s.escalate_to.n} < source demand {s.n}")
         leftover, fabric = _dispatch_streams(self.cluster, streams, cfg,
                                              scenario, arbiter=arbiter)
         clock = self.cluster.clock

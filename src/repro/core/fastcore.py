@@ -113,11 +113,13 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
               if cfg.fabric in ("shared", "maxmin") else None)
     if multi is None:
         multi = len(streams) > 1
+    _eng._check_dag_streams(streams, cfg)
     for s in streams:
         if s.controller is not None:
             s.controller.begin_stream(kmax, adaptive=adaptive)
     done_total = 0
-    total_n = sum(s.n for s in streams)
+    # cascade targets submit only via escalation (oracle-identical)
+    total_n = sum(s.n for s in streams if not s.dynamic)
     t0 = clock.now_ms
     wheel = TimeWheel()
     nev = 0
@@ -137,6 +139,8 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
     wheel.push(t0, P_POLL, None)
     for s in streams:
         s.last_rate_t = t0
+        if s.dynamic:
+            continue
         if s.arrivals is None:
             for r in range(min(s.concurrency, s.n)):
                 wheel.push(t0, P_SUBMIT, (s, r))
@@ -205,16 +209,27 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
         wheel.push(end, P_CDONE, (node, st, batch, dur))
 
     def finish_request(s, r: int, t: float) -> None:
-        nonlocal done_total
+        nonlocal done_total, total_n
         s.cols.finish_ms[r] = t
         s.done += 1
         done_total += 1
         if shard_log is not None and s.done == s.n:
             shard_log.append((t, "drained", s.name))
+        tgt = s.escalate_to
+        if tgt is not None and s.cols.exit_head[r] == -1:
+            # cascade miss: escalate into the target stream (oracle's
+            # finish_request verbatim)
+            nr = tgt.next_r
+            assert nr < tgt.n, (
+                f"cascade target {tgt.name!r} capacity {tgt.n} exceeded")
+            tgt.next_r = nr + 1
+            total_n += 1
+            wheel.push(t, P_SUBMIT, (tgt, nr))
         if s.arrivals is None:
-            nxt = r + s.concurrency
-            if nxt < s.n:
-                wheel.push(t, P_SUBMIT, (s, nxt))
+            if not s.dynamic:      # cascade targets submit via escalation
+                nxt = r + s.concurrency
+                if nxt < s.n:
+                    wheel.push(t, P_SUBMIT, (s, nxt))
         else:
             s.in_flight -= 1
             if s.admit_q:
@@ -233,10 +248,11 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
         if shard_log is not None and s.done == s.n:
             shard_log.append((t, "drained", s.name))
         if s.arrivals is None:
-            for r in batch:
-                nxt = r + s.concurrency
-                if nxt < s.n:
-                    wheel.push(t, P_SUBMIT, (s, nxt))
+            if not s.dynamic:      # cascade targets submit via escalation
+                for r in batch:
+                    nxt = r + s.concurrency
+                    if nxt < s.n:
+                        wheel.push(t, P_SUBMIT, (s, nxt))
         else:
             for _ in batch:
                 s.in_flight -= 1
@@ -249,6 +265,19 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
         s = table.stream
         if s.cache is None:
             st = table.stages[idx]
+            if st.pred_count > 1:      # join: release on last arrival
+                ready = []
+                for r in rs:
+                    key = (idx, r)
+                    c = s.joins.get(key, 0) + 1
+                    if c == st.pred_count:
+                        del s.joins[key]
+                        ready.append(r)
+                    else:
+                        s.joins[key] = c
+                rs = ready
+                if not rs:
+                    return
             pend = st.node.pending
             for r in rs:
                 pend.append((st, r))
@@ -408,7 +437,11 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
             table.stream = s
             s.cols.stages[r] = len(table.stages)
             ta = t + SCHEDULING_OVERHEAD_MS
-            if fabric is None and ta < wheel.peek_time():
+            # fusion refuses DAG tables outright: every stage of one sits
+            # beyond a branch, join, or exit head, so the chain walker's
+            # single-successor stepping does not apply (satellite of the
+            # DAG suite — both cores then dispatch identical events)
+            if fabric is None and table.chain and ta < wheel.peek_time():
                 fused_walk(s, table, r, ta)
             else:
                 wheel.push(ta, P_ARRIVE, (table, 0, [r]))
@@ -438,10 +471,14 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                 for r in batch:
                     s.cache.put(st.key_prefix + (s.sigs[r],), st.cache_value,
                                 transfer_bytes=st.out_bytes)
+            if st.succs is not None:   # DAG stage: shared continuation
+                _eng._dag_cdone(node, st, batch, t, mode, s, wheel.push,
+                                finish_request, try_start)
+                continue
             recv = st.recv_node
             if recv is None:
                 node.engine_busy = False
-                if k >= COLUMNAR_K:
+                if k >= COLUMNAR_K and s.escalate_to is None:
                     finish_batch(s, batch, t)
                 else:
                     for r in batch:
@@ -609,6 +646,7 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                             s.controller.on_engine_event("scenario",
                                                          force_poll=True)
 
+    _eng._trim_dynamic(streams)
     # columns first: fault-mode finalize and the death accounting below
     # both read/patch the written-back columns (mirrors the oracle, whose
     # columns are live arrays throughout)
@@ -664,6 +702,10 @@ def _shardable(streams: Sequence, cfg, scenario, arbiter) -> Optional[List[List]
         return None
     if any(s.controller is not None for s in streams):
         return None
+    if any(s.escalate_to is not None or s.dynamic for s in streams):
+        # cascade escalation couples the source and target timelines
+        # through cross-stream submits — never shard them apart
+        return None
     groups = shard_groups(streams)
     return groups if len(groups) > 1 else None
 
@@ -707,7 +749,7 @@ def _group_state(cluster, group: Sequence, log: list, nev: int) -> dict:
             cols={f: getattr(s.cols, f) for f in
                   ("arrival_ms", "submit_ms", "finish_ms", "comm_ms",
                    "service_ms", "cache_hits", "stages", "retries",
-                   "hedges", "status")},
+                   "hedges", "status", "exit_head")},
             comm=s.comm, service=s.service, hits=s.hits, sigs=s.sigs,
             total_net=s.total_net, done=s.done, arrived=s.arrived,
             in_flight=s.in_flight, qd_t=s.qd_t, qd_n=s.qd_n,

@@ -76,6 +76,65 @@ def bottleneck_boundaries(layer_costs: Sequence[float], num_partitions: int,
 
 
 @dataclass(frozen=True)
+class StageDag:
+    """Stage-level dataflow derived from the layer DAG for one cut list.
+
+    Stages remain contiguous ranges of the topologically-ordered layer
+    list; the layer edges induce stage edges (coalesced per stage pair,
+    bytes summed), join fan-in counts, per-stage early-exit heads, and
+    per-stage reach probabilities. ``None`` on a :class:`PartitionPlan`
+    means the graph is a chain and the original FIFO stage pipeline
+    applies bit-for-bit."""
+    #: per stage: ``((succ_stage, bytes), ...)`` sorted by successor id
+    succs: Tuple[Tuple[Tuple[int, int], ...], ...]
+    #: per stage: number of distinct predecessor stages (>1 == join)
+    pred_counts: Tuple[int, ...]
+    #: per stage: ``((exit_layer_id, exit_prob), ...)`` for exit heads
+    #: contained in the stage (the request draws its exit when the stage
+    #: completes)
+    exit_heads: Tuple[Tuple[Tuple[int, float], ...], ...]
+    #: per stage: probability a request still executes the stage (product
+    #: of ``1 - exit_prob`` over exit heads in strictly earlier layers)
+    reach: Tuple[float, ...]
+
+
+def build_stage_dag(graph: ModelGraph, cuts: Sequence[int]) -> StageDag:
+    """Derive the :class:`StageDag` for ``cuts`` over a validated operator
+    DAG. Cuts must be strictly increasing (no degenerate empty stages —
+    an empty stage has no layer edges and would be unreachable)."""
+    graph.validate_dag()
+    assert all(cuts[i] < cuts[i + 1] for i in range(len(cuts) - 1)), (
+        f"DAG plans forbid empty stages: {cuts}")
+    m = len(cuts) - 1
+    stage_of: List[int] = []
+    for i in range(m):
+        stage_of += [i] * (cuts[i + 1] - cuts[i])
+    edge_bytes: dict = {}
+    for u, v in graph.layer_edges():
+        su, sv = stage_of[u], stage_of[v]
+        if su == sv:
+            continue
+        b = graph.layers[u].out_bytes + graph.layers[u].state_bytes
+        edge_bytes[(su, sv)] = edge_bytes.get((su, sv), 0) + b
+    succs: List[List[Tuple[int, int]]] = [[] for _ in range(m)]
+    pred_counts = [0] * m
+    for (su, sv), b in sorted(edge_bytes.items()):
+        succs[su].append((sv, b))
+        pred_counts[sv] += 1
+    exit_heads: List[List[Tuple[int, float]]] = [[] for _ in range(m)]
+    for e, l in enumerate(graph.layers):
+        if l.exit_prob > 0.0:
+            exit_heads[stage_of[e]].append((e, l.exit_prob))
+    reach_l = graph.reach_probs()
+    return StageDag(
+        succs=tuple(tuple(s) for s in succs),
+        pred_counts=tuple(pred_counts),
+        exit_heads=tuple(tuple(h) for h in exit_heads),
+        reach=tuple(reach_l[cuts[i]] for i in range(m)),
+    )
+
+
+@dataclass(frozen=True)
 class Partition:
     """One deployable stage: the contiguous layer range ``[lo, hi)`` plus
     its cost, parameter bytes, and boundary activation sizes (paper B4)."""
@@ -99,6 +158,8 @@ class PartitionPlan:
     whole model graph."""
     graph_name: str
     partitions: List[Partition]
+    #: stage-level dataflow for operator-DAG graphs; None == chain plan
+    stage_dag: Optional[StageDag] = None
 
     @property
     def sizes(self) -> List[int]:
@@ -280,16 +341,36 @@ class ModelPartitioner:
         are scaled by the current calibration, as in :meth:`plan`."""
         assert cuts[0] == 0 and cuts[-1] == len(self.graph.layers), cuts
         parts = []
+        if self.graph.is_chain:
+            for i in range(len(cuts) - 1):
+                lo, hi = cuts[i], cuts[i + 1]
+                parts.append(Partition(
+                    index=i, lo=lo, hi=hi,
+                    cost=partition_cost(self.graph, lo, hi) * self._calibration,
+                    params_bytes=partition_params_bytes(self.graph, lo, hi),
+                    in_bytes=boundary_bytes(self.graph, lo),
+                    out_bytes=boundary_bytes(self.graph, hi),
+                ))
+            return PartitionPlan(self.graph.name, parts)
+        # operator DAG: boundary bytes are the summed layer edges crossing
+        # each stage boundary (a chain's single crossing edge degenerates
+        # to boundary_bytes above)
+        dag = build_stage_dag(self.graph, cuts)
+        in_b = [0] * (len(cuts) - 1)
+        out_b = [0] * (len(cuts) - 1)
+        for si, edges in enumerate(dag.succs):
+            for sj, b in edges:
+                out_b[si] += b
+                in_b[sj] += b
         for i in range(len(cuts) - 1):
             lo, hi = cuts[i], cuts[i + 1]
             parts.append(Partition(
                 index=i, lo=lo, hi=hi,
                 cost=partition_cost(self.graph, lo, hi) * self._calibration,
                 params_bytes=partition_params_bytes(self.graph, lo, hi),
-                in_bytes=boundary_bytes(self.graph, lo),
-                out_bytes=boundary_bytes(self.graph, hi),
+                in_bytes=in_b[i], out_bytes=out_b[i],
             ))
-        return PartitionPlan(self.graph.name, parts)
+        return PartitionPlan(self.graph.name, parts, stage_dag=dag)
 
     def working_set(self, part: Partition, batch: int = 1) -> float:
         """Params + peak activation bytes for one partition at ``batch`` —

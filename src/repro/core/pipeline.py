@@ -61,6 +61,8 @@ class RequestMetrics:
     retries: int = 0            # fault-mode re-dispatch attempts consumed
     hedges: int = 0             # fault-mode hedged duplicates spawned
     status: int = 0             # 0 done / 1 shed / 2 failed (core.faults)
+    exit_head: int = -1         # layer id of the early-exit head that
+                                # terminated this request (-1: ran to tail)
 
     @property
     def latency_ms(self) -> float:
@@ -88,7 +90,7 @@ class RequestColumns:
 
     __slots__ = ("submit_ms", "finish_ms", "comm_ms", "service_ms",
                  "cache_hits", "stages", "arrival_ms", "retries", "hedges",
-                 "status")
+                 "status", "exit_head")
 
     def __init__(self, n: int):
         self.submit_ms = np.zeros(n, dtype=np.float64)
@@ -103,9 +105,22 @@ class RequestColumns:
         self.retries = np.zeros(n, dtype=np.int64)
         self.hedges = np.zeros(n, dtype=np.int64)
         self.status = np.zeros(n, dtype=np.int64)
+        # early-exit head (operator DAGs): layer id the request exited at,
+        # -1 when it ran to the tail — all -1 on chain plans
+        self.exit_head = np.full(n, -1, dtype=np.int64)
 
     def __len__(self) -> int:
         return len(self.submit_ms)
+
+    def head(self, m: int) -> "RequestColumns":
+        """Column view of the first ``m`` requests — used to trim a
+        cascade escalation target (its arrivals are injected by the cheap
+        tenant's misses, so only a prefix of its capacity is populated)."""
+        assert 0 < m <= len(self), (m, len(self))
+        out = RequestColumns.__new__(RequestColumns)
+        for f in self.__slots__:
+            setattr(out, f, getattr(self, f)[:m])
+        return out
 
     @property
     def sojourn_ms(self) -> np.ndarray:
@@ -151,6 +166,7 @@ class RequestColumns:
             cols.retries[i] = r.retries
             cols.hedges[i] = r.hedges
             cols.status[i] = r.status
+            cols.exit_head[i] = r.exit_head
         return cols
 
     def materialize(self) -> List[RequestMetrics]:
@@ -163,7 +179,7 @@ class RequestColumns:
                                float(self.service_ms[i]),
                                float(self.arrival_ms[i]),
                                int(self.retries[i]), int(self.hedges[i]),
-                               int(self.status[i]))
+                               int(self.status[i]), int(self.exit_head[i]))
                 for i in range(len(self.submit_ms))]
 
 
@@ -353,11 +369,36 @@ class RunReport:
         done / (done + shed + failed). 1.0 on fault-free runs."""
         return self.done_count / max(len(self.columns), 1)
 
+    # --- early-exit metrics (operator DAGs) -----------------------------------
+
+    def exit_counts(self) -> Dict[int, int]:
+        """Request count per termination point: ``{exit_layer_id: count}``
+        plus ``{-1: tail_count}``. Chain plans report everything under -1."""
+        heads, counts = np.unique(self.columns.exit_head, return_counts=True)
+        return {int(h): int(c) for h, c in zip(heads, counts)}
+
+    def goodput_by_exit(self, deadline_ms: float) -> Dict[int, float]:
+        """Per-exit-head goodput (deadline-meeting completions per second
+        over the whole run's span), keyed like :meth:`exit_counts` — the
+        early-exit accounting: how much of the served rate each head
+        (and the tail, key -1) contributes."""
+        c = self.columns
+        span = max(float(c.finish_ms.max() - c.arrival_ms.min()), 1e-9)
+        met = c.deadline_met(deadline_ms)
+        return {int(h): 1000.0 * int(met[c.exit_head == h].sum()) / span
+                for h in np.unique(c.exit_head)}
+
+    @property
+    def early_exit_rate(self) -> float:
+        """Fraction of requests that terminated at an exit head."""
+        return float(np.mean(self.columns.exit_head >= 0))
+
     def row(self) -> dict:
         """Flatten the report into one benchmark-table row. Fault-mode
-        runs (``fault_stats`` set) append the lifecycle columns; the key
-        set of fault-free rows is unchanged, so committed benchmark
-        baselines stay byte-identical."""
+        runs (``fault_stats`` set) append the lifecycle columns, and
+        early-exit runs (any ``exit_head`` >= 0) append the per-head
+        counts; the key set of chain/fault-free rows is unchanged, so
+        committed benchmark baselines stay byte-identical."""
         fs = self.fault_stats
         extra = {} if fs is None else dict(
             done=self.done_count, shed=self.shed_count,
@@ -366,6 +407,10 @@ class RunReport:
             hedges=int(self.columns.hedges.sum()),
             availability=round(self.availability, 4),
         )
+        if (self.columns.exit_head >= 0).any():
+            extra["early_exit_rate"] = round(self.early_exit_rate, 4)
+            for h, c in sorted(self.exit_counts().items()):
+                extra[f"exit[{'tail' if h < 0 else h}]"] = c
         return dict(
             config=self.name,
             latency_ms=round(self.steady_latency_ms, 2),   # paper's metric
@@ -630,6 +675,8 @@ class DistributedInference:
         request — O(requests × stages × layers) — so use :meth:`run` for
         anything beyond a few thousand requests.
         """
+        assert self.partitioner.graph.is_chain, \
+            "run_legacy walks stages linearly — DAG plans require run()"
         if self.controller is not None:
             self.controller.reset_rates()   # same contract as the engine
         rng = np.random.default_rng(seed)

@@ -200,6 +200,9 @@ def bottleneck_ms(graph: ModelGraph, partitions, assignment: Dict[int, str],
     model = batch_model if batch_model is not None else ANALYTIC_BATCH_MODEL
     k = max(int(expected_k), 1)
     plain = k == 1 and model.is_analytic
+    if not graph.is_chain:
+        return _dag_bottleneck_ms(graph, partitions, assignment, cluster,
+                                  scale, batch, model, k, plain)
     per_node: Dict[str, float] = {}
     for part in partitions:
         node = cluster.nodes[assignment[part.index]]
@@ -217,6 +220,52 @@ def bottleneck_ms(graph: ModelGraph, partitions, assignment: Dict[int, str],
                 part.in_bytes * batch if part.lo > 0 else 0.0,
                 node.profile, k,
                 model.partition_curve(graph, part.lo, part.hi))
+        per_node[node.node_id] = per_node.get(node.node_id, 0.0) + t
+    return max(per_node.values()) if per_node else math.inf
+
+
+def _dag_bottleneck_ms(graph: ModelGraph, partitions, assignment, cluster,
+                       scale: float, batch: int, model: BatchCostModel,
+                       k: int, plain: bool) -> float:
+    """The DAG branch of :func:`bottleneck_ms`: stage compute is
+    reach-weighted (downstream of an exit head only the surviving
+    probability mass runs), and each stage's incoming traffic is the sum
+    of the layer edges entering it — every crossing edge pays its own
+    link latency on the receiving node (join synchronization), weighted
+    by the destination layer's reach. Mirrors the DAG terms of
+    ``PartitionPlanner._time_matrix`` so the planner's DP and the
+    controller's evaluator agree on DAG plans too."""
+    reach = graph.reach_probs()
+    stage_of: Dict[int, int] = {}
+    for part in partitions:
+        for l in range(part.lo, part.hi):
+            stage_of[l] = part.index
+    in_edges: Dict[int, List[Tuple[int, float]]] = {
+        part.index: [] for part in partitions}
+    for u, v in graph.layer_edges():
+        if stage_of[u] == stage_of[v]:
+            continue
+        b = graph.layers[u].out_bytes + graph.layers[u].state_bytes
+        in_edges[stage_of[v]].append((b, reach[v]))
+    per_node: Dict[str, float] = {}
+    for part in partitions:
+        node = cluster.nodes[assignment[part.index]]
+        if not node.online:
+            return math.inf
+        cost = sum(graph.layers[i].cost * reach[i]
+                   for i in range(part.lo, part.hi)) * scale
+        if plain:
+            t = execution_ms(cost, node.profile,
+                             working_set_bytes(graph, part.lo, part.hi, batch))
+            t += sum(w * transfer_ms(b * batch, node.profile)
+                     for b, w in in_edges[part.index])
+        else:
+            t = model.amortized_stage_ms(
+                cost, working_set_bytes(graph, part.lo, part.hi, batch * k),
+                0.0, node.profile, k,
+                model.partition_curve(graph, part.lo, part.hi))
+            t += sum(w * transfer_ms(b * batch * k, node.profile)
+                     for b, w in in_edges[part.index]) / k
         per_node[node.node_id] = per_node.get(node.node_id, 0.0) + t
     return max(per_node.values()) if per_node else math.inf
 
@@ -262,6 +311,29 @@ class PartitionPlanner:
         self._empty_mask = np.tril(np.ones((L + 1, L + 1), dtype=bool))
         self._L = L
         self._curve_mats = None   # lazy blended calibration matrices
+        # --- operator-DAG overlays (chain graphs never touch these, so the
+        # chain DP path stays bit-for-bit the original) -----------------------
+        self._dag = not graph.is_chain
+        if self._dag:
+            graph.validate_dag()
+            reach = np.array(graph.reach_probs(), dtype=np.float64)
+            wprefix = np.concatenate([[0.0], np.cumsum(costs * reach)])
+            # reach-weighted expected cost of layers [a, b): downstream of an
+            # exit head, compute only runs with the surviving probability mass
+            self._stage_cost_dag = wprefix[None, :] - wprefix[:, None]
+            # incoming boundary traffic of stage [a, b) is the sum over layer
+            # edges (u, v) with u < a <= v < b — 2D, unlike the chain's
+            # single left-boundary edge; each crossing edge pays its own link
+            # latency (join synchronization), weighted by reach[v]
+            in_b2 = np.zeros((L + 1, L + 1))
+            in_c2 = np.zeros((L + 1, L + 1))
+            for u, v in graph.layer_edges():
+                b = graph.layers[u].out_bytes + graph.layers[u].state_bytes
+                w = float(reach[v])
+                in_b2[u + 1:v + 1, v + 1:] += b * w
+                in_c2[u + 1:v + 1, v + 1:] += w
+            self._in_bytes2 = in_b2
+            self._in_cnt2 = in_c2
 
     def _curve_matrices(self):
         """(O, S, KN, TL) matrices of the cost-weighted blended calibration
@@ -300,12 +372,13 @@ class PartitionPlanner:
         budgets and tenancy weights compose unchanged."""
         prof = view.profile
         k = max(int(expected_k), 1)
+        sc = self._stage_cost_dag if self._dag else self._stage_cost
         if k == 1 and self.batch_model.is_analytic:
-            t = (self._stage_cost * scale
+            t = (sc * scale
                  / (BASE_THROUGHPUT * min(prof.cpu, 1.0)) + FIXED_OVERHEAD_MS)
             ws = self._params_mat + batch * self._peak_act
         else:
-            per_item = (self._stage_cost * scale
+            per_item = (sc * scale
                         / (BASE_THROUGHPUT * min(prof.cpu, 1.0)))
             if self.batch_model.is_analytic:
                 t = per_item * k + FIXED_OVERHEAD_MS
@@ -321,11 +394,20 @@ class PartitionPlanner:
             # meaningless negative of an empty b < a range)
             pressure = np.where(over, ws / prof.mem_bytes, 1.0)
             t = t * pressure ** MEM_PRESSURE_ALPHA
-        in_b = self._in_bytes * (batch * k)
-        xfer = np.where(in_b > 0,
-                        prof.net_latency_ms
-                        + in_b * 8.0 / (prof.net_bw_mbps * 1e3), 0.0)
-        t = t + xfer[:, None]
+        if self._dag:
+            # per-crossing-edge latency (join synchronization: every
+            # incoming branch pays its own link round-trip) + summed bytes
+            in_b = self._in_bytes2 * (batch * k)
+            xfer = np.where(self._in_cnt2 > 0,
+                            self._in_cnt2 * prof.net_latency_ms
+                            + in_b * 8.0 / (prof.net_bw_mbps * 1e3), 0.0)
+            t = t + xfer
+        else:
+            in_b = self._in_bytes * (batch * k)
+            xfer = np.where(in_b > 0,
+                            prof.net_latency_ms
+                            + in_b * 8.0 / (prof.net_bw_mbps * 1e3), 0.0)
+            t = t + xfer[:, None]
         if k != 1:
             t = t / k
         return np.where(self._empty_mask, np.inf, t)
@@ -371,9 +453,11 @@ class PartitionPlanner:
                        weights: Sequence[float]) -> Optional[List[int]]:
         """Bottleneck-balanced m-way cuts for per-stage capability weights —
         the shared ``partitioner.bottleneck_boundaries`` search. Only seeds
-        candidate orders, so it ignores overhead/transfer terms."""
-        return bottleneck_boundaries(np.diff(self._stage_cost[0]).tolist(),
-                                     m, weights)
+        candidate orders, so it ignores overhead/transfer terms. On a DAG
+        graph the seeds balance the reach-weighted expected costs (the
+        objective the DP actually prices stages at)."""
+        sc = self._stage_cost_dag if self._dag else self._stage_cost
+        return bottleneck_boundaries(np.diff(sc[0]).tolist(), m, weights)
 
     def _rematch_order(self, cuts: List[int], node_idx: List[int],
                        caps: List[float]) -> List[int]:
@@ -761,7 +845,26 @@ class PartitionPlanner:
         for i in range(len(cuts) - 1):
             lo, hi = cuts[i], cuts[i + 1]
             v = view_by[assignment[i]]
-            if plain:
+            if self._dag:
+                # mirror the DAG terms of _time_matrix: reach-weighted cost
+                # plus per-crossing-edge transfers on the receiving link
+                sc = float(self._stage_cost_dag[lo, hi]) * scale
+                xfer = (float(self._in_cnt2[lo, hi]) * v.profile.net_latency_ms
+                        + float(self._in_bytes2[lo, hi]) * (batch * k) * 8.0
+                        / (v.profile.net_bw_mbps * 1e3))
+                if plain:
+                    ms = (execution_ms(
+                        sc, v.profile,
+                        float(self._params_mat[lo, hi]
+                              + batch * self._peak_act[lo, hi])) + xfer) * weight
+                else:
+                    ms = (self.batch_model.amortized_stage_ms(
+                        sc, float(self._params_mat[lo, hi]
+                                  + (batch * k) * self._peak_act[lo, hi]),
+                        0.0, v.profile, k,
+                        self.batch_model.partition_curve(self.graph, lo, hi))
+                        + xfer / k) * weight
+            elif plain:
                 ms = _stage_ms(
                     float(self._stage_cost[lo, hi]) * scale,
                     float(self._params_mat[lo, hi]

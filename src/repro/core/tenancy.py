@@ -61,7 +61,12 @@ class TenantTraffic:
     to scale that tenant's per-node time budget (a 2x-rate tenant loads a
     node twice as much per deployed stage). ``retry_budget`` caps this
     tenant's total fault-mode retries (``core.faults``); None defers to
-    the run's ``FaultConfig.retry_budget``.
+    the run's ``FaultConfig.retry_budget``. ``escalate_to`` names another
+    tenant as this tenant's model-cascade target: every request that
+    reaches this tenant's plan tail *without* an early-exit head firing
+    (a cascade miss) is escalated — re-submitted into the target tenant's
+    stream at its finish time. The target's ``num_requests`` then acts as
+    a capacity, not a demand: it serves exactly the escalated misses.
     """
     num_requests: int = 100
     arrivals: Optional[ArrivalProcess] = None
@@ -71,6 +76,7 @@ class TenantTraffic:
     deadline_ms: float = 2000.0
     weight: float = 1.0
     retry_budget: Optional[int] = None
+    escalate_to: Optional[str] = None
 
 
 class Tenant:
@@ -270,7 +276,10 @@ class TenantRegistry:
         """
         assert self.tenants, "no tenants registered"
         tenants = list(self.tenants.values())
-        if len(tenants) == 1:
+        assert all(t.traffic.escalate_to is None or
+                   t.traffic.escalate_to in self.tenants
+                   for t in tenants), "cascade target tenant not registered"
+        if len(tenants) == 1 and tenants[0].traffic.escalate_to is None:
             t = tenants[0]
             tr = t.traffic
             rep = t.pipeline.run(tr.num_requests, name=f"{name}/{t.name}",

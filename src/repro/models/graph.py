@@ -31,6 +31,10 @@ class LayerSpec:
     out_bytes: int = 0             # activation bytes at this layer's output boundary
     flops: float = 0.0             # real FLOPs (TPU roofline cost model)
     state_bytes: int = 0           # recurrent/KV state crossing the boundary
+    preds: Optional[Tuple[int, ...]] = None  # explicit predecessor layer ids;
+                                   # None = the previous layer (chain default)
+    exit_prob: float = 0.0         # early-exit head: per-request probability of
+                                   # terminating here instead of continuing
 
 
 @dataclass
@@ -52,6 +56,140 @@ class ModelGraph:
 
     def __len__(self) -> int:
         return len(self.layers)
+
+    # --- operator-DAG structure ------------------------------------------
+    # Layers are kept in one topologically-ordered list; explicit ``preds``
+    # edges (always pointing backwards) express branches and joins on top
+    # of it.  A graph whose resolved edges are exactly the chain and whose
+    # exit probabilities are all zero *is* a chain — ``is_chain`` is the
+    # normalization every planner/engine DAG branch gates on, so
+    # chain-degenerate DAGs flow through the original code paths
+    # bit-for-bit.
+
+    def pred_ids(self, i: int) -> Tuple[int, ...]:
+        """Resolved predecessor layer ids of layer ``i`` — the explicit
+        ``preds`` tuple when given, else the chain default (the previous
+        layer; layer 0 has none)."""
+        p = self.layers[i].preds
+        if p is None:
+            return (i - 1,) if i > 0 else ()
+        return tuple(p)
+
+    @property
+    def is_chain(self) -> bool:
+        """True when the graph degenerates to a linear chain: every
+        layer's resolved predecessor set is exactly the previous layer and
+        no layer carries early-exit probability mass."""
+        for i, l in enumerate(self.layers):
+            if l.exit_prob != 0.0:
+                return False
+            if l.preds is not None and tuple(l.preds) != ((i - 1,) if i else ()):
+                return False
+        return True
+
+    def layer_edges(self) -> List[Tuple[int, int]]:
+        """Every dataflow edge ``(u, v)`` with ``u < v``, in (v, then u)
+        order — the layer list is the topological order, so edges always
+        point forward."""
+        edges: List[Tuple[int, int]] = []
+        for v in range(len(self.layers)):
+            for u in self.pred_ids(v):
+                edges.append((u, v))
+        return edges
+
+    def successors(self) -> List[List[int]]:
+        """Per-layer successor id lists (derived from ``pred_ids``)."""
+        succ: List[List[int]] = [[] for _ in self.layers]
+        for u, v in self.layer_edges():
+            succ[u].append(v)
+        return succ
+
+    def reach_probs(self) -> List[float]:
+        """``reach[i]``: probability a request still executes layer ``i``,
+        i.e. the product of ``(1 - exit_prob)`` over every exit head
+        strictly before it.  All-ones for chains (no exit heads)."""
+        reach: List[float] = []
+        acc = 1.0
+        for l in self.layers:
+            reach.append(acc)
+            if l.exit_prob > 0.0:
+                acc *= 1.0 - l.exit_prob
+        return reach
+
+    def validate_dag(self) -> None:
+        """Structural validation for operator-DAG graphs.
+
+        Asserts: predecessor ids are strictly increasing and in-range,
+        layer 0 is the unique source, every non-final layer has at least
+        one successor (no dead ends — this is what makes early exits
+        conservation-sound), exit probabilities lie in ``(0, 1)`` and
+        never sit on the final layer, and each exit head ``e`` is an
+        articulation point: every edge crossing the post-``e`` boundary
+        originates at ``e`` itself, so when ``e`` completes no other work
+        for the request can still be in flight."""
+        L = len(self.layers)
+        assert L > 0, "empty graph"
+        n_succ = [0] * L
+        for v in range(L):
+            p = self.pred_ids(v)
+            if v == 0:
+                assert p == (), f"layer 0 must be the source, has preds {p}"
+            else:
+                assert p, f"layer {v} ({self.layers[v].name}) has no preds"
+            last = -1
+            for u in p:
+                assert 0 <= u < v, f"edge ({u}, {v}) is not forward"
+                assert u > last, f"layer {v} preds not strictly increasing"
+                last = u
+                n_succ[u] += 1
+        for u in range(L - 1):
+            assert n_succ[u] > 0, (
+                f"layer {u} ({self.layers[u].name}) is a dead end")
+        edges = self.layer_edges()
+        for e, l in enumerate(self.layers):
+            if l.exit_prob == 0.0:
+                continue
+            assert 0.0 < l.exit_prob < 1.0, (
+                f"exit_prob of layer {e} must lie in (0, 1): {l.exit_prob}")
+            assert e < L - 1, "the final layer cannot be an exit head"
+            for u, v in edges:
+                assert not (u <= e < v) or u == e, (
+                    f"exit head {e} is not an articulation point: edge "
+                    f"({u}, {v}) crosses its boundary")
+
+
+def branched_graph(name: str = "branched", trunk: int = 3, arms: int = 2,
+                   arm_len: int = 2, tail: int = 2, exit_prob: float = 0.0,
+                   cost: float = 2e6, out_bytes: int = 1 << 16,
+                   params: int = 4096) -> ModelGraph:
+    """Synthetic MoE-style operator DAG: a ``trunk`` chain (whose last
+    layer is an early-exit head when ``exit_prob > 0``) fanning out into
+    ``arms`` parallel expert branches of ``arm_len`` layers each, a join
+    layer, and a ``tail`` chain.  Arm ``a`` costs ``(1 + a/4) * cost`` per
+    layer so the branches are asymmetric (the join genuinely waits)."""
+    assert trunk >= 1 and arms >= 2 and arm_len >= 1 and tail >= 1
+    g = ModelGraph(name)
+
+    def add(lname, c, preds=None, p_exit=0.0):
+        g.layers.append(LayerSpec(lname, "Linear", params, float(c),
+                                  out_bytes=out_bytes, flops=2.0 * c,
+                                  preds=preds, exit_prob=p_exit))
+
+    for i in range(trunk):
+        add(f"trunk{i}", cost,
+            p_exit=exit_prob if i == trunk - 1 else 0.0)
+    arm_last = []
+    for a in range(arms):
+        start = trunk + a * arm_len
+        for j in range(arm_len):
+            preds = (trunk - 1,) if j == 0 else (start + j - 1,)
+            add(f"arm{a}.{j}", cost * (1.0 + 0.25 * a), preds=preds)
+        arm_last.append(start + arm_len - 1)
+    add("join", cost, preds=tuple(arm_last))
+    for i in range(1, tail):
+        add(f"tail{i}", cost)
+    g.validate_dag()
+    return g
 
 
 # ---------------------------------------------------------------------------

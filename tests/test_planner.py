@@ -14,7 +14,8 @@ from repro.core.partitioner import ModelPartitioner
 from repro.core.pipeline import DistributedInference
 from repro.core.planner import (NodeView, PartitionPlanner, PlannerConfig,
                                 bottleneck_ms, node_views_from_cluster)
-from repro.models.graph import LayerSpec, ModelGraph, mobilenetv2_graph
+from repro.models.graph import (LayerSpec, ModelGraph, branched_graph,
+                                mobilenetv2_graph)
 
 
 def toy_graph(costs, out_bytes=1000, params=1000):
@@ -591,3 +592,81 @@ def test_calibrated_model_changes_planner_numbers():
     base = PartitionPlanner(g).plan(views, mode="dp")
     cal = PartitionPlanner(g, batch_model=m).plan(views, mode="dp")
     assert cal.bottleneck_ms > base.bottleneck_ms
+
+
+# --- operator-DAG cuts: brute-force oracle ------------------------------------
+# Stages stay contiguous ranges of the topologically-ordered layer list,
+# so brute_force's cut enumeration IS the set of topological cut lists —
+# the same oracle locks down the DAG objective (reach-weighted stage
+# costs + per-crossing-edge join transfers) with zero new machinery.
+
+def test_dag_exhaustive_matches_direct_bruteforce():
+    g = branched_graph(trunk=1, arms=2, arm_len=1, tail=2, exit_prob=0.3,
+                       cost=8e6)
+    planner = PartitionPlanner(g)
+    views = make_views([1.0, 0.5, 0.3])
+    res = planner.plan(views, mode="exhaustive")
+    assert res.bottleneck_ms == pytest.approx(brute_force(planner, views))
+
+
+@settings(max_examples=12, deadline=None)
+@given(cpus=st.lists(st.floats(min_value=0.2, max_value=2.0),
+                     min_size=2, max_size=3),
+       arm_len=st.integers(min_value=1, max_value=2),
+       exit_case=st.integers(min_value=0, max_value=2))
+def test_dag_dp_matches_bruteforce_on_small_graphs(cpus, arm_len, exit_case):
+    """On every <= 6-layer DAG × <= 3-node cluster, the DAG DP must find a
+    plan with the same cost as direct enumeration of all topological cut
+    lists × injective assignments — with and without early-exit mass."""
+    g = branched_graph(trunk=1, arms=2, arm_len=arm_len, tail=1,
+                       exit_prob=(0.0, 0.35, 0.7)[exit_case], cost=6e6)
+    assert len(g.layers) <= 6
+    planner = PartitionPlanner(g)
+    views = make_views(cpus)
+    ex = planner.plan(views, mode="exhaustive")
+    auto = planner.plan(views)               # <= 5 nodes: auto == exhaustive
+    dp = planner.plan(views, mode="dp")
+    bf = brute_force(planner, views)
+    assert ex.bottleneck_ms == pytest.approx(bf), \
+        f"exhaustive {ex.bottleneck_ms} != brute force {bf} on {cpus}"
+    assert auto.bottleneck_ms == pytest.approx(bf), \
+        f"auto {auto.bottleneck_ms} != brute force {bf} on {cpus}"
+    # the forced polynomial heuristic (the n > 5 path) is sound — it
+    # prices a real feasible plan — and stays near the optimum
+    assert dp.bottleneck_ms >= bf - 1e-9
+    assert dp.bottleneck_ms <= bf * 1.10, \
+        f"DP {dp.bottleneck_ms} drifted >10% from oracle {bf} on {cpus}"
+
+
+def test_dag_stage_loads_matches_bottleneck():
+    """The DAG branch of stage_loads decomposes the DAG objective per
+    node: its max equals the plan's reported bottleneck."""
+    g = branched_graph(exit_prob=0.25)
+    planner = PartitionPlanner(g)
+    views = make_views([1.0, 0.8, 0.6])
+    res = planner.plan(views, mode="dp")
+    loads = planner.stage_loads(res.cuts, res.assignment, views)
+    assert max(loads.values()) == pytest.approx(res.bottleneck_ms)
+
+
+def test_dag_planner_agrees_with_controller_evaluator():
+    """bottleneck_ms (the AdaptationController's evaluator) and the
+    planner's DP matrices must price a deployed DAG plan identically, or
+    migration decisions drift from planning decisions."""
+    g = branched_graph(exit_prob=0.25)
+    cluster = make_paper_cluster()
+    d = DistributedInference(cluster, ModelPartitioner(g), method="planner")
+    ev = bottleneck_ms(g, d.plan.partitions, d.placement, cluster)
+    res = PartitionPlanner(g).plan(node_views_from_cluster(cluster))
+    assert ev == pytest.approx(res.bottleneck_ms, rel=1e-9)
+
+
+def test_dag_planner_prefers_post_exit_discount():
+    """Reach weighting must matter: with heavy exit mass at the trunk
+    head, layers behind the exit are cheap in expectation, so the plan's
+    bottleneck drops relative to the exit-free graph."""
+    base = PartitionPlanner(branched_graph(exit_prob=0.0))
+    exity = PartitionPlanner(branched_graph(exit_prob=0.8))
+    views = make_views([1.0, 0.8, 0.6])
+    assert (exity.plan(views, mode="dp").bottleneck_ms
+            < base.plan(views, mode="dp").bottleneck_ms)
