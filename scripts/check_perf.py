@@ -60,10 +60,12 @@ SCALE_VOLATILE_FIELDS = {"num_requests", "wall_s", "sim_req_per_wall_s",
 #: arbitration-beats-independent margin) is compared exactly
 MT_VOLATILE_FIELDS = {"wall_s", "sim_req_per_wall_s"}
 #: eventspersec rows: the dispatched event count is simulated (exact); the
-#: wall clock, the derived rate, and the measured speedup ratio are not —
-#: the ≥10× floor itself is asserted inside the bench, so a collapsed
-#: speedup still fails the gate (as a bench error, not a metric diff)
-EV_VOLATILE_FIELDS = {"wall_s", "events_per_sec", "speedup_vs_heap"}
+#: wall clock, the derived rates, the measured speedup ratios, and the
+#: fork-pipe payload size are not — the ≥10×-vs-heap and ≥2×-vs-interleaved
+#: floors are asserted inside the bench itself, so a collapsed speedup
+#: still fails the gate (as a bench error, not a metric diff)
+EV_VOLATILE_FIELDS = {"wall_s", "events_per_sec", "speedup_vs_heap",
+                      "speedup_vs_interleaved", "pipe_bytes"}
 #: sections with wall-clock-volatile rows: {section: its volatile fields};
 #: rows carrying ``sim_req_per_wall_s`` also get the wall-rate band
 WALL_SECTIONS = {"scale": frozenset(SCALE_VOLATILE_FIELDS),

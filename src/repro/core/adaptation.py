@@ -261,6 +261,21 @@ class AdaptationController:
         ``arrival-overload`` drift alive into the next run."""
         self._rate_obs.clear()
 
+    def _closure_stats(self, stats: Dict[str, NodeStats]
+                       ) -> Dict[str, NodeStats]:
+        """Restrict telemetry to the pipeline's ``nodes=`` closure.
+
+        Every controller input — drift detection, the planner candidates,
+        the capacity baseline — runs on the filtered view, so a closed
+        tenant can never observe (or migrate onto) a node outside its
+        declared subset. That invariant is what lets the fast core shard
+        adaptive tenants: disjoint closures prove disjoint reachable node
+        sets. Identity when no closure was declared."""
+        allowed = getattr(self.pipeline, "allowed_nodes", None)
+        if allowed is None:
+            return stats
+        return {nid: s for nid, s in stats.items() if nid in allowed}
+
     # --- telemetry -> drift ---------------------------------------------------
 
     def _detect_drift(self, stats: Dict[str, NodeStats]) -> List[str]:
@@ -385,7 +400,7 @@ class AdaptationController:
         if self.monitor.last_poll_ms <= self._last_eval_ms and not force_poll:
             return None
         self._last_eval_ms = self.monitor.last_poll_ms
-        stats = self.monitor.snapshots
+        stats = self._closure_stats(self.monitor.snapshots)
         if self._planned_caps is None:   # first observation anchors the plan
             self._planned_caps = {nid: s.capability for nid, s in stats.items()}
         drifts = self._detect_drift(stats)
@@ -492,8 +507,9 @@ class AdaptationController:
         # direct apply() path re-evaluates persistent drifts too
         self._last_skipped_drifts = None
         self._planned_calibration = self.partitioner.calibration
-        self._planned_caps = {nid: s.capability
-                              for nid, s in self.monitor.snapshots.items()}
+        self._planned_caps = {
+            nid: s.capability
+            for nid, s in self._closure_stats(self.monitor.snapshots).items()}
         kind_detail = (f"partial({decision.moved_stages} stage(s)) -> "
                        if decision.partial else
                        f"{len(decision.plan.partitions)}-way -> ")
@@ -551,8 +567,9 @@ class AdaptationController:
         # the drift was considered and judged not worth acting on; anchor
         # the baseline so the same signal doesn't re-fire every poll
         self._planned_calibration = self.partitioner.calibration
-        self._planned_caps = {nid: s.capability
-                              for nid, s in self.monitor.snapshots.items()}
+        self._planned_caps = {
+            nid: s.capability
+            for nid, s in self._closure_stats(self.monitor.snapshots).items()}
 
     def defer(self, decision: MigrationDecision, detail: str) -> None:
         """Arbitration outcome: the decision wanted to migrate but another

@@ -149,11 +149,17 @@ class EngineConfig:
     is the time-wheel core (``core.fastcore``) with fused chains and
     columnar poll ticks; ``"heap"`` is the original heap loop, kept as
     the differential oracle — the two produce bit-identical results
-    (``tests/test_engine_parity.py``). ``shards="auto"`` lets the fast
-    core run placement-disjoint controller-less tenant groups on
-    independent wheels (per-request columns and SLO metrics stay pinned;
-    poll-tick *sampling* series may differ); ``shard_workers > 1``
-    additionally forks that many worker processes.
+    (``tests/test_engine_parity.py``). ``shards="auto"`` (the default)
+    lets the fast core run reachable-disjoint tenant groups on
+    independent wheels: controller-less groups free-run to completion
+    (sampling series merge-extended to the fleet horizon afterwards),
+    groups under adaptation controllers or a capacity arbiter run
+    between epoch barriers with one fleet-wide poll tick — either way
+    every report field stays bit-identical to the interleaved run.
+    ``shard_workers > 1`` additionally forks that many worker processes
+    for free-running groups. ``shards="none"`` is a debug escape hatch
+    that pins the single interleaved wheel (useful when bisecting the
+    sharded merge itself); it is never required for correctness.
 
     ``faults`` attaches a :class:`core.faults.FaultConfig`: seeded
     fault injection (crash/restart, transfer loss, execution failures,
@@ -167,7 +173,7 @@ class EngineConfig:
     fabric: str = "isolated"
     adaptive_batch: bool = False
     core: str = "fast"
-    shards: str = "none"
+    shards: str = "auto"
     shard_workers: int = 0
     faults: Optional[FaultConfig] = None
 

@@ -11,7 +11,7 @@ vs the engine's fast path: the slow loop is kept, unchanged, as the
 semantic reference, and ``tests/test_engine_parity.py`` drives both
 cores across a generative configuration space asserting equality.
 
-Four mechanisms, each engineered so every float is produced by the same
+Five mechanisms, each engineered so every float is produced by the same
 expression in the same order as the oracle:
 
 **Time wheel** (``core.timewheel``). The global ``heapq`` becomes a
@@ -47,19 +47,35 @@ snapshots, so those must exist bit-identically. Same-tick completion
 batches of ``COLUMNAR_K``-plus requests land in ``RequestColumns`` via
 one vectorized write instead of a per-request loop.
 
-**Sharding.** With ``EngineConfig(shards="auto")``, streams whose
-placements touch disjoint node sets (and no controller / arbiter /
-scenario / shared fabric / cache coupling) are partitioned into
-independent groups, each run to completion on its own wheel from the
-same start clock — optionally in forked worker processes
-(``shard_workers``) whose per-stream results, node counters, and
-monitor/scheduler state are merged back deterministically, along with a
-``(time, shard, entry)``-ordered merge of per-shard event logs
-(:func:`merge_shard_logs`). Sharded runs pin the per-request columns
-and SLO metrics to the interleaved run; the poll-tick *sampling* series
-(queue-depth trace, monitor overhead) legitimately differ, because a
-shard stops polling when its own streams drain rather than when the
-whole fleet does.
+**Contended-chain fusion.** Chain fusion alone refuses a busy node, so
+back-to-back micro-batches on a contended node still round-trip the
+wheel once per batch. A handler-tail ``try_start`` instead parks its
+batch completion in a one-slot defer cell; the main loop dispatches it
+inline while it is strictly earlier than the wheel head, else flushes
+it to the wheel before the next pop — relative order among equal keys
+is exactly the oracle's either way, so saturated single-node queues
+drain without per-batch wheel traffic and stay bit-exact.
+
+**Sharding** (``shards="auto"``, the default). Streams whose
+*reachable* node sets are disjoint — the placement, plus the ``nodes=``
+closure for streams carrying an adaptation controller — are partitioned
+into independent groups (no scenario / shared fabric / fault coupling),
+each run on its own wheel from the same start clock. Controller-less
+groups **free-run** to completion, optionally in forked worker
+processes (``shard_workers``) whose slimmed per-stream results, node
+counters, and monitor/scheduler state are merged back
+deterministically; the per-shard poll series are then merge-extended to
+the fleet horizon (:func:`_extend_shard_polls`) and abandoned trailing
+sender-releases reconciled (:func:`_reconcile_tails`), so the
+queue-depth traces, monitor overhead, and event counts equal the
+interleaved run's bit-for-bit. Groups under controllers or a capacity
+arbiter run as suspended generators between **epoch barriers**
+(:func:`_run_epoch`): independent wheels between poll epochs, one
+fleet-wide tick over all streams at every epoch — the control loop
+observes exactly the merged fleet state it would on one wheel.
+``shards="none"`` pins the single interleaved wheel as a debug escape
+hatch. Per-shard event logs merge in ``(time, shard, entry)`` order
+(:func:`merge_shard_logs`).
 """
 
 from __future__ import annotations
@@ -79,7 +95,8 @@ from repro.core.faults import account_stream_deaths
 from repro.core import monitor as _mon
 from repro.core.monitor import POLL_INTERVAL_MS
 from repro.core.scheduler import SCHEDULING_OVERHEAD_MS
-from repro.core.tenancy import disjoint_placement_groups
+from repro.core.tenancy import (disjoint_node_groups,
+                                disjoint_placement_groups)
 from repro.core.timewheel import TimeWheel
 
 #: logical events dispatched by the most recent ``run_fast_streams`` call
@@ -91,19 +108,101 @@ LAST_EVENT_COUNT = 0
 #: interleaved runs) — diagnostics for tests and the bench
 LAST_SHARD_LOG: List[tuple] = []
 
+#: bytes shipped over the fork-worker result pipes by the most recent
+#: sharded run (0 for in-process and interleaved runs) — the fork tax the
+#: slimmed shard-state payload keeps down; reported by the bench
+LAST_SHARD_PIPE_BYTES = 0
+
 #: same-tick completion batches at or above this size take the vectorized
 #: ``RequestColumns`` write; below it a plain loop is faster than numpy
 #: fancy-indexing overhead
 COLUMNAR_K = 16
 
 
-def _run_group(cluster, streams: Sequence, cfg, scenario,
-               arbiter=None, multi: Optional[bool] = None,
-               shard_log: Optional[list] = None) -> tuple:
+def _poll_tick(streams: Sequence, t: float, multi: bool, arbiter,
+               closure: bool = False) -> None:
+    """The interleaved run's poll-tick body over ``streams`` in stream
+    order: compact monitor/scheduler refresh for controller-less streams,
+    the object path (live ``NodeStats``) for controller streams,
+    queue-depth samples, rate observations, committed-budget refresh, and
+    the arbiter/controller control-loop entry. Shared verbatim by the
+    interleaved loop's ``P_POLL`` handler and the epoch-barrier
+    coordinator's central tick, so the two cannot drift.
+
+    ``closure=True`` (the epoch coordinator's tick) takes the
+    closure-local poll (``ResourceMonitor.poll_closure``) for controller
+    streams with a declared ``nodes=`` subset: snapshots are built only
+    for the nodes the controller can actually read, which is where
+    adaptive sharding's events/sec win comes from — a fleet-wide
+    object-path poll per stream per simulated second is the interleaved
+    run's dominant cost at scale. Every epoch-mode stream has such a
+    closure (it is the shard-eligibility gate), and the sharded-vs-
+    interleaved property in ``tests/test_engine_parity.py`` pins the
+    resulting reports — adaptation logs included — bit-for-bit."""
+    for s in streams:
+        if t - s.monitor.last_poll_ms >= POLL_INTERVAL_MS:
+            if s.controller is None:
+                # compact tick: identical side effects and Eq. 4
+                # winner from live node reads, no snapshot objects
+                online = s.monitor.poll_compact()
+                s.scheduler.select_node_compact(online)
+            else:
+                allowed = (getattr(s.pipe, "allowed_nodes", None)
+                           if closure else None)
+                if allowed is not None:
+                    stats = s.monitor.poll_closure(allowed)
+                else:
+                    stats = s.monitor.online_stats()
+                s.scheduler.select_node(stats)
+            s.engine._flush_sched()
+        s.qd_t.append(t)
+        s.qd_n.append(s.arrived - s.done)
+        if s.controller is not None:
+            s.controller.last_queue_depth = s.arrived - s.done
+        if s.arrivals is not None and s.controller is not None:
+            window = t - s.last_rate_t
+            if window > 0:
+                s.controller.observe_rates(
+                    1000.0 * (s.arrived - s.last_arr) / window,
+                    1000.0 * (s.done - s.last_done) / window)
+                s.last_rate_t, s.last_arr, s.last_done = (
+                    t, s.arrived, s.done)
+    if multi:
+        for s in streams:
+            if s.controller is not None:
+                s.pipe.committed_ms = _eng._committed_excluding(
+                    streams, s)
+    if arbiter is not None:
+        arbiter.on_engine_event("poll")
+    else:
+        for s in streams:
+            if s.controller is not None:
+                s.controller.on_engine_event("poll")
+
+
+def _group_events(cluster, streams: Sequence, cfg, scenario,
+                  arbiter=None, multi: Optional[bool] = None,
+                  shard_log: Optional[list] = None, epoch: bool = False):
     """One wheel-driven event loop over ``streams`` — the oracle
     (``engine._run_event_streams``) handler-for-handler, with the fused
-    chain walker, compact poll ticks, and columnar completion writes
-    layered on. Returns ``(leftover_scenario_events, fabric, n_events)``.
+    chain walker, contended-chain fusion (deferred same-node batch
+    completions dispatched inline), compact poll ticks, and columnar
+    completion writes layered on.
+
+    A generator so the epoch-barrier shard coordinator can drive it:
+    with ``epoch=True`` no poll events enter the wheel; instead the loop
+    yields whenever its next event would reach the current barrier
+    ``horizon`` (initially the start clock), and the coordinator sends
+    the next barrier time back in. The group's simulated clock is saved
+    across each yield, so concurrently-driven groups never observe each
+    other's clock. With ``epoch=False`` the body never yields.
+
+    Returns (``StopIteration.value``)
+    ``(leftover_scenario_events, fabric, n_events, tail)`` where ``tail``
+    is the abandoned trailing-event list ``[(time, node_id), ...]``
+    (computed for shard-mode runs, else empty) — same-time SDONE events
+    the interleaved run would still have popped while *other* groups kept
+    running; see ``_reconcile_tails``.
     """
     clock = cluster.clock
     mode = cfg.transfer
@@ -134,9 +233,26 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
     P_ARRIVAL = _eng._P_ARRIVAL
     P_SUBMIT = _eng._P_SUBMIT
 
+    #: contended-chain fusion cell — at most one deferred CDONE push,
+    #: ``[end_time, payload]``; handler-tail ``try_start`` calls park the
+    #: completion here so the main loop can dispatch a back-to-back
+    #: same-node batch inline instead of round-tripping the wheel
+    defer: list = []
+    horizon = t0        # epoch mode: the next central poll-tick barrier
+    if epoch:
+        def peek_fn() -> float:
+            # epoch barrier caps the fusion lookahead: nothing may be
+            # walked inline at or past the next central tick, because
+            # that tick observes (and may migrate) merged fleet state
+            pt = wheel.peek_time()
+            return pt if pt < horizon else horizon
+    else:
+        peek_fn = wheel.peek_time
+
     for ev in sorted(scenario or [], key=lambda e: e.at_ms):
         wheel.push(max(ev.at_ms, t0), P_SCENARIO, ev)
-    wheel.push(t0, P_POLL, None)
+    if not epoch:
+        wheel.push(t0, P_POLL, None)
     for s in streams:
         s.last_rate_t = t0
         if s.dynamic:
@@ -172,8 +288,10 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                           arbiter=arbiter)
         fr.begin(t0)
 
-    def try_start(node, now: float) -> None:
-        # oracle's try_start verbatim, pushing CDONE to the wheel
+    def try_start(node, now: float, defer_ok: bool = False) -> None:
+        # oracle's try_start verbatim, pushing CDONE to the wheel — or,
+        # from a handler-tail call site, parking the push in ``defer`` so
+        # the main loop can fuse a back-to-back same-node batch
         if node.engine_busy or not node.pending:
             return
         q = node.pending
@@ -206,7 +324,11 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
         tb[stream.tenant_name] = tb.get(stream.tenant_name, 0.0) + dur
         node.recent_exec.append(dur if k == 1 else dur / k)
         st.pending_execs += k
-        wheel.push(end, P_CDONE, (node, st, batch, dur))
+        if defer_ok and not defer:
+            defer.append(end)
+            defer.append((node, st, batch, dur))
+        else:
+            wheel.push(end, P_CDONE, (node, st, batch, dur))
 
     def finish_request(s, r: int, t: float) -> None:
         nonlocal done_total, total_n
@@ -307,16 +429,17 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
 
     def fused_walk(s, table, r: int, ta: float) -> None:
         """Walk one request's chain inline while every step is strictly
-        earlier than the wheel's next event and its node is idle; commits
-        the oracle's side effects step-by-step, downgrading to wheel
-        events at the first tie or contention. Caller guarantees
-        ``ta < wheel.peek_time()`` and ``fabric is None``."""
+        earlier than the wheel's next event (capped at the epoch barrier
+        when one is active) and its node is idle; commits the oracle's
+        side effects step-by-step, downgrading to wheel events at the
+        first tie or contention. Caller guarantees ``ta < peek_fn()``
+        and ``fabric is None``."""
         nonlocal nev
         tnow = ta
         idx = 0
         cache = s.cache
         stages = table.stages
-        peek_time = wheel.peek_time
+        peek_time = peek_fn
         while True:
             # --- inline ARRIVE at tnow (strictly before the wheel head) ---
             nev += 1
@@ -411,8 +534,34 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
             tnow = nxt_t
 
     deaths = False      # scenario "offline" seen (fault-free accounting)
-    while wheel and (done_total if fr is None else fr.terminated) < total_n:
-        t, prio, _, payload = wheel.pop()
+    while wheel or defer:
+        if (done_total if fr is None else fr.terminated) >= total_n:
+            break
+        if defer:
+            # contended-chain fusion: a handler-tail try_start parked
+            # this completion. Dispatch it inline while it is strictly
+            # earliest (no wheel round-trip for back-to-back same-node
+            # batches); otherwise flush it — the push happens before any
+            # later event pops, so relative order among equal keys is
+            # exactly the oracle's
+            end = defer[0]
+            if end < peek_fn():
+                t, prio, payload = end, P_CDONE, defer[1]
+                del defer[:]
+            else:
+                wheel.push(end, P_CDONE, defer[1])
+                del defer[:]
+                continue
+        else:
+            if epoch and wheel.peek_time() >= horizon:
+                # epoch barrier: every local event strictly before the
+                # next central poll tick has run; the coordinator fires
+                # the fleet-wide tick, then sends the next barrier in
+                saved = clock.now_ms
+                horizon = yield
+                clock.now_ms = saved
+                continue
+            t, prio, _, payload = wheel.pop()
         nev += 1
         if t > clock.now_ms:
             clock.now_ms = t
@@ -441,7 +590,7 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
             # beyond a branch, join, or exit head, so the chain walker's
             # single-successor stepping does not apply (satellite of the
             # DAG suite — both cores then dispatch identical events)
-            if fabric is None and table.chain and ta < wheel.peek_time():
+            if fabric is None and table.chain and ta < peek_fn():
                 fused_walk(s, table, r, ta)
             else:
                 wheel.push(ta, P_ARRIVE, (table, 0, [r]))
@@ -483,7 +632,7 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                 else:
                     for r in batch:
                         finish_request(s, r, t)
-                try_start(node, t)
+                try_start(node, t, True)
             else:
                 ob = st.out_bytes * k
                 tm = st.xfer_for(k)
@@ -527,7 +676,7 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                         sx = t
                     node.tx_free_ms = sx + tm
                     wheel.push(sx + tm, P_ARRIVE, (tbl, st.next_index, batch))
-                    try_start(node, t)
+                    try_start(node, t, True)
                 elif mode == "serial":
                     node.busy_until_ms = t + tm
                     wheel.push(t + tm, P_SDONE, node)
@@ -535,7 +684,7 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                 else:
                     node.engine_busy = False
                     wheel.push(t + tm, P_ARRIVE, (tbl, st.next_index, batch))
-                    try_start(node, t)
+                    try_start(node, t, True)
 
         elif prio == P_XFER:
             if payload[0] == "bw":
@@ -568,7 +717,7 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
         elif prio == P_SDONE:
             node = payload
             node.engine_busy = False
-            try_start(node, t)
+            try_start(node, t, True)
 
         elif prio == P_POLL:
             if shard_log is not None:
@@ -584,47 +733,18 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                     if t - m.last_poll_ms >= POLL_INTERVAL_MS:
                         m.last_poll_ms = t
                         m.polls += 1
-                        m.overhead_ms += (
-                            _mon.MONITOR_COST_MS_PER_POLL * n_nodes)
+                        # per-node accumulation, not a bulk multiply:
+                        # ``monitor_overhead_pct`` is compared bit-exact
+                        # against the oracle, whose poll charges the cost
+                        # one node at a time
+                        for _ in range(n_nodes):
+                            m.overhead_ms += _mon.MONITOR_COST_MS_PER_POLL
                     s.qd_t.append(t)
                     s.qd_n.append(s.arrived - s.done)
                 if wheel.count_outside_lanes(P_POLL, P_SCENARIO) > 0:
                     wheel.push(t + POLL_INTERVAL_MS, P_POLL, None)
                 continue
-            for s in streams:
-                if t - s.monitor.last_poll_ms >= POLL_INTERVAL_MS:
-                    if s.controller is None:
-                        # compact tick: identical side effects and Eq. 4
-                        # winner from live node reads, no snapshot objects
-                        online = s.monitor.poll_compact()
-                        s.scheduler.select_node_compact(online)
-                    else:
-                        stats = s.monitor.online_stats()
-                        s.scheduler.select_node(stats)
-                    s.engine._flush_sched()
-                s.qd_t.append(t)
-                s.qd_n.append(s.arrived - s.done)
-                if s.controller is not None:
-                    s.controller.last_queue_depth = s.arrived - s.done
-                if s.arrivals is not None and s.controller is not None:
-                    window = t - s.last_rate_t
-                    if window > 0:
-                        s.controller.observe_rates(
-                            1000.0 * (s.arrived - s.last_arr) / window,
-                            1000.0 * (s.done - s.last_done) / window)
-                        s.last_rate_t, s.last_arr, s.last_done = (
-                            t, s.arrived, s.done)
-            if multi:
-                for s in streams:
-                    if s.controller is not None:
-                        s.pipe.committed_ms = _eng._committed_excluding(
-                            streams, s)
-            if arbiter is not None:
-                arbiter.on_engine_event("poll")
-            else:
-                for s in streams:
-                    if s.controller is not None:
-                        s.controller.on_engine_event("poll")
+            _poll_tick(streams, t, multi, arbiter)
             if wheel.count_outside_lanes(P_POLL, P_SCENARIO) > 0:
                 wheel.push(t + POLL_INTERVAL_MS, P_POLL, None)
 
@@ -671,7 +791,55 @@ def _run_group(cluster, streams: Sequence, cfg, scenario,
                        if pr == P_SCENARIO
                        and isinstance(pl, ScenarioEvent)),
                       key=lambda e: e.at_ms)
-    return leftover, fabric, nev
+    tail: List[tuple] = []
+    if epoch or shard_log is not None:
+        # shard-mode runs: collect the events this group abandons at its
+        # own completion. Only trailing sender-release SDONEs can exist
+        # here (every other lane's payload implies an unfinished request,
+        # contradicting group completion), and only those the *global*
+        # run would still have popped get reconciled — see
+        # ``_reconcile_tails``. The leftover self-rechained poll is this
+        # group's own, never the fleet's, so it is dropped.
+        for tt, pr, _, pl in wheel:
+            if pr == P_POLL:
+                continue
+            assert pr == P_SDONE, (
+                f"group drained with a live lane-{pr} event at t={tt}")
+            tail.append((tt, pl.node_id))
+    return leftover, fabric, nev, tail
+
+
+def _run_group(cluster, streams: Sequence, cfg, scenario,
+               arbiter=None, multi: Optional[bool] = None,
+               shard_log: Optional[list] = None) -> tuple:
+    """Run one stream group to completion (the non-epoch driver around
+    :func:`_group_events`); returns ``(leftover, fabric, nev, tail)``."""
+    gen = _group_events(cluster, streams, cfg, scenario, arbiter=arbiter,
+                        multi=multi, shard_log=shard_log)
+    try:
+        next(gen)
+    except StopIteration as stop:
+        return stop.value
+    raise AssertionError("non-epoch group run must not yield")
+
+
+def _reconcile_tails(cluster, tails: Sequence[Sequence[tuple]],
+                     t_end: float) -> int:
+    """Dispatch the abandoned trailing SDONEs the interleaved run would
+    still have popped: a group that drains at its local end time leaves a
+    same-time sender-release in its wheel, but the global loop only stops
+    at the *fleet's* last completion — any such SDONE strictly earlier
+    than that still fires there (releasing ``engine_busy``; its
+    ``try_start`` is a no-op on a drained group's empty queues). Applies
+    that release and returns the number of reconciled events, so sharded
+    event counts match the interleaved run exactly."""
+    n = 0
+    for tail in tails:
+        for tt, nid in tail:
+            if tt < t_end:
+                cluster.nodes[nid].engine_busy = False
+                n += 1
+    return n
 
 
 # --- sharding ----------------------------------------------------------------
@@ -687,27 +855,49 @@ def shard_groups(streams: Sequence) -> List[List]:
     return [[streams[i] for i in g] for g in idx_groups]
 
 
-def _shardable(streams: Sequence, cfg, scenario, arbiter) -> Optional[List[List]]:
-    """The placement-disjoint groups when sharding is enabled and safe —
-    no controller/arbiter (control ticks observe the whole fleet), no
-    scenario events (they mutate shared cluster state at global times),
-    isolated fabric (shared links couple timelines) — else None."""
-    if cfg.shards != "auto" or arbiter is not None or scenario:
+def _shardable(streams: Sequence, cfg, scenario,
+               arbiter) -> Optional[Tuple[List[List], str]]:
+    """The reachable-disjoint groups and run mode when sharding is
+    enabled and safe, else None.
+
+    Hard exclusions: scenario events (they mutate shared cluster state
+    at global times), shared fabric (links couple timelines), fault
+    injection (one RNG + crash chains couple every stream), and cascade
+    escalation (cross-stream submits).
+
+    Grouping is over each stream's *reachable* node set: the placement
+    for an immobile stream, placement ∪ ``nodes=`` closure for one
+    carrying an ``AdaptationController`` (a controller with no declared
+    closure can migrate anywhere, so the fleet degenerates to one group
+    and the run stays interleaved). Controller-less disjoint groups run
+    free (``"free"``: independent wheels to completion, sampling series
+    merge-extended afterwards); groups with controllers or an arbiter
+    run under the epoch barrier (``"epoch"``: independent wheels between
+    poll ticks, one fleet-wide tick at every poll epoch)."""
+    if cfg.shards != "auto" or scenario:
         return None
     if cfg.fabric != "isolated":
         return None
     if cfg.faults is not None:
-        # fault mode: one RNG + crash chains couple every stream's
-        # timeline through shared node state — never shard
-        return None
-    if any(s.controller is not None for s in streams):
         return None
     if any(s.escalate_to is not None or s.dynamic for s in streams):
-        # cascade escalation couples the source and target timelines
-        # through cross-stream submits — never shard them apart
         return None
-    groups = shard_groups(streams)
-    return groups if len(groups) > 1 else None
+    reach = []
+    for s in streams:
+        nodes = set(s.pipe.placement.values())
+        if s.controller is not None:
+            allowed = getattr(s.pipe, "allowed_nodes", None)
+            if allowed is None:
+                return None
+            nodes |= allowed
+        reach.append(nodes)
+    idx_groups = disjoint_node_groups(reach)
+    if len(idx_groups) <= 1:
+        return None
+    groups = [[streams[i] for i in g] for g in idx_groups]
+    epoch = arbiter is not None or any(s.controller is not None
+                                       for s in streams)
+    return groups, ("epoch" if epoch else "free")
 
 
 def merge_shard_logs(logs: Sequence[Sequence[tuple]]) -> List[tuple]:
@@ -724,33 +914,45 @@ def merge_shard_logs(logs: Sequence[Sequence[tuple]]) -> List[tuple]:
             ((t, si, ei, entry) for t, si, ei, entry in out)]
 
 
-def _group_state(cluster, group: Sequence, log: list, nev: int) -> dict:
+def _group_state(cluster, group: Sequence, log: list, nev: int,
+                 tail: list) -> dict:
     """Pickle-able end-of-run state of one forked shard: per-stream
     results, per-node counters, and per-stream monitor/scheduler state.
     The child flushes its scheduler feed first so stage-table counters
-    need not travel."""
+    need not travel.
+
+    The payload is kept minimal (pipe bytes are the fork tax): columns
+    whose values the parent can reconstruct do not travel — the fault
+    columns (``retries``/``hedges``/``status``) are untouched on any
+    shardable run, ``exit_head`` only moves for DAG plans, the per-stream
+    ``stages`` column is one constant (no migration happens on a free
+    shard), and the ``comm``/``service``/``hits`` accumulator lists are
+    rebuilt from the written-back columns. The per-request ``sigs`` list
+    is run-internal scratch and never travels."""
     for s in group:
         s.engine._flush_sched()
     nodes = {}
     for s in group:
         for nid in set(s.pipe.placement.values()):
             n = cluster.nodes[nid]
-            assert not n.pending and not n.engine_busy, nid
+            assert not n.pending, nid
             nodes[nid] = dict(
                 busy_until_ms=n.busy_until_ms, cpu_busy_ms=n.cpu_busy_ms,
                 task_count=n.task_count, mem_used_bytes=n.mem_used_bytes,
                 net_rx_bytes=n.net_rx_bytes, net_tx_bytes=n.net_tx_bytes,
-                tx_free_ms=n.tx_free_ms,
+                tx_free_ms=n.tx_free_ms, engine_busy=n.engine_busy,
                 tenant_busy_ms=dict(n.tenant_busy_ms),
                 recent_exec=list(n.recent_exec))
     def stream_state(s):
         m, sch = s.monitor, s.scheduler
+        cols = {f: getattr(s.cols, f) for f in
+                ("arrival_ms", "submit_ms", "finish_ms", "comm_ms",
+                 "service_ms", "cache_hits")}
+        if not s.pipe.partitioner.graph.is_chain:
+            cols["exit_head"] = s.cols.exit_head
         return dict(
-            cols={f: getattr(s.cols, f) for f in
-                  ("arrival_ms", "submit_ms", "finish_ms", "comm_ms",
-                   "service_ms", "cache_hits", "stages", "retries",
-                   "hedges", "status", "exit_head")},
-            comm=s.comm, service=s.service, hits=s.hits, sigs=s.sigs,
+            cols=cols,
+            stages0=int(s.cols.stages[0]) if len(s.cols.stages) else 0,
             total_net=s.total_net, done=s.done, arrived=s.arrived,
             in_flight=s.in_flight, qd_t=s.qd_t, qd_n=s.qd_n,
             bhist=s.bhist, last_rate_t=s.last_rate_t, last_arr=s.last_arr,
@@ -766,7 +968,7 @@ def _group_state(cluster, group: Sequence, log: list, nev: int) -> dict:
                            decisions=sch.decisions,
                            overhead_ms=sch.overhead_ms))
     return dict(streams=[stream_state(s) for s in group], nodes=nodes,
-                clock=cluster.clock.now_ms, log=log, nev=nev)
+                clock=cluster.clock.now_ms, log=log, nev=nev, tail=tail)
 
 
 def _apply_group_state(cluster, group: Sequence, state: dict) -> None:
@@ -780,14 +982,20 @@ def _apply_group_state(cluster, group: Sequence, state: dict) -> None:
         n.net_rx_bytes = nd["net_rx_bytes"]
         n.net_tx_bytes = nd["net_tx_bytes"]
         n.tx_free_ms = nd["tx_free_ms"]
+        n.engine_busy = nd["engine_busy"]
         n.tenant_busy_ms = nd["tenant_busy_ms"]
         n.recent_exec = deque(nd["recent_exec"],
                               maxlen=n.recent_exec.maxlen)
     for s, ss in zip(group, state["streams"]):
         for f, arr in ss["cols"].items():
             getattr(s.cols, f)[:] = arr
-        s.comm, s.service, s.hits, s.sigs = (
-            ss["comm"], ss["service"], ss["hits"], ss["sigs"])
+        if len(s.cols.stages):
+            s.cols.stages[:] = ss["stages0"]
+        # accumulator lists rebuilt from the written-back columns (the
+        # child's epilogue copied them there verbatim)
+        s.comm = s.cols.comm_ms.tolist()
+        s.service = s.cols.service_ms.tolist()
+        s.hits = s.cols.cache_hits.tolist()
         s.total_net = ss["total_net"]
         s.done, s.arrived, s.in_flight = (
             ss["done"], ss["arrived"], ss["in_flight"])
@@ -820,27 +1028,69 @@ def _read_exact(fd: int, n: int) -> bytes:
     return b"".join(chunks)
 
 
+def _extend_shard_polls(cluster, groups, logs, t0: float) -> int:
+    """Free-run merge-extension: append the poll ticks each shard stopped
+    short of, so the merged sampling series equals the interleaved run's
+    bit-for-bit.
+
+    A shard's tick times are the prefix ``t0, t0+Δ, ...`` it reaches
+    before draining; the interleaved run keeps ticking until the *fleet*
+    drains, i.e. for ``K = max_A k_A`` ticks. For each group this appends
+    the missing ticks' side effects exactly as the interleaved tick would
+    produce them on a drained group: poll stamp + counter, the per-node
+    overhead charge in the same accumulation order (``overhead_ms`` is
+    compared bit-exact through ``monitor_overhead_pct``), and the
+    queue-depth sample — which is ``arrived - done = 0`` on a drained
+    group, matching the interleaved series' tail. Returns the tick-count
+    correction to apply to the summed per-shard event counts:
+    ``K - Σ k_A`` (the interleaved run pops *one* poll event per fleet
+    tick, not one per shard)."""
+    n_nodes = len(cluster.nodes)
+    cost = _mon.MONITOR_COST_MS_PER_POLL
+    k_counts = [sum(1 for e in log if e[1] == "poll") for log in logs]
+    K = max(k_counts)
+    for gi, group in enumerate(groups):
+        for j in range(k_counts[gi], K):
+            tj = t0 + j * POLL_INTERVAL_MS
+            logs[gi].append((tj, "poll", len(group)))
+            for s in group:
+                m = s.monitor
+                m.last_poll_ms = tj
+                m.polls += 1
+                for _ in range(n_nodes):
+                    m.overhead_ms += cost
+                s.qd_t.append(tj)
+                s.qd_n.append(s.arrived - s.done)
+    return K - sum(k_counts)
+
+
 def _run_sharded(cluster, streams, cfg, groups, multi) -> tuple:
-    """Run placement-disjoint groups each on its own wheel from the same
-    start clock — forked workers when ``cfg.shard_workers > 1`` (and no
-    cache state would need to travel), else in-process sequentially —
-    and merge results deterministically."""
-    global LAST_SHARD_LOG
+    """Free-run sharding: placement-disjoint, controller-less groups each
+    run on their own wheel from the same start clock — forked workers
+    when ``cfg.shard_workers > 1`` (and no cache state would need to
+    travel), else in-process sequentially — then results merge
+    deterministically: sampling series are tick-extended to the fleet
+    horizon and abandoned trailing events reconciled, so reports and
+    event counts equal the interleaved run's exactly."""
+    global LAST_SHARD_LOG, LAST_SHARD_PIPE_BYTES
     clock = cluster.clock
     t0 = clock.now_ms
     nev_total = 0
     ends: List[float] = []
     logs: List[list] = []
+    tails: List[list] = []
+    pipe_bytes = 0
     fork_ok = (cfg.shard_workers > 1 and hasattr(os, "fork")
                and all(s.cache is None for g in groups for s in g))
     if not fork_ok:
         for group in groups:
             clock.now_ms = t0
             log: list = []
-            _, _, nev = _run_group(cluster, group, cfg, None, None,
-                                   multi=multi, shard_log=log)
+            _, _, nev, tail = _run_group(cluster, group, cfg, None, None,
+                                         multi=multi, shard_log=log)
             ends.append(clock.now_ms)
             logs.append(log)
+            tails.append(tail)
             nev_total += nev
     else:
         workers = min(cfg.shard_workers, len(groups))
@@ -857,11 +1107,12 @@ def _run_sharded(cluster, streams, cfg, groups, multi) -> tuple:
                     for group in glist:
                         clock.now_ms = t0
                         log = []
-                        _, _, nev = _run_group(cluster, group, cfg, None,
-                                               None, multi=multi,
-                                               shard_log=log)
+                        _, _, nev, tail = _run_group(cluster, group, cfg,
+                                                     None, None,
+                                                     multi=multi,
+                                                     shard_log=log)
                         payload.append(_group_state(cluster, group, log,
-                                                    nev))
+                                                    nev, tail))
                     blob = pickle.dumps(("ok", payload),
                                         protocol=pickle.HIGHEST_PROTOCOL)
                 except BaseException as e:    # ship the failure, then die
@@ -875,8 +1126,10 @@ def _run_sharded(cluster, streams, cfg, groups, multi) -> tuple:
                     os._exit(code)
             os.close(wfd)
             procs.append((pid, rfd, glist))
+        paired_logs = []
         for pid, rfd, glist in procs:
             size = int.from_bytes(_read_exact(rfd, 8), "big")
+            pipe_bytes += size
             status, payload = pickle.loads(_read_exact(rfd, size))
             os.close(rfd)
             os.waitpid(pid, 0)
@@ -885,16 +1138,84 @@ def _run_sharded(cluster, streams, cfg, groups, multi) -> tuple:
             for group, state in zip(glist, payload):
                 _apply_group_state(cluster, group, state)
                 ends.append(state["clock"])
-                logs.append(state["log"])
+                paired_logs.append((group, state["log"]))
+                tails.append(state["tail"])
                 nev_total += state["nev"]
         # re-order logs back to group order (lanes interleave round-robin)
-        order = [g for lane in lanes for g in lane]
-        remap = {id(g): i for i, g in enumerate(order)}
-        paired = sorted(zip((remap[id(g)] for lane in lanes for g in lane),
-                            logs))
-        logs = [lg for _, lg in paired]
-    clock.now_ms = max(ends) if ends else t0
+        remap = {id(g): i for i, g in enumerate(groups)}
+        paired_logs.sort(key=lambda p: remap[id(p[0])])
+        logs = [lg for _, lg in paired_logs]
+    t_end = max(ends) if ends else t0
+    clock.now_ms = t_end
+    nev_total += _extend_shard_polls(cluster, groups, logs, t0)
+    nev_total += _reconcile_tails(cluster, tails, t_end)
     LAST_SHARD_LOG = merge_shard_logs(logs)
+    LAST_SHARD_PIPE_BYTES = pipe_bytes
+    return [], None, nev_total
+
+
+def _run_epoch(cluster, streams, cfg, groups, multi, arbiter) -> tuple:
+    """Epoch-barrier sharding: groups whose streams carry adaptation
+    controllers (or run under a capacity arbiter) share one control
+    loop — the fleet-wide poll tick — but are otherwise disjoint. Each
+    group runs as a suspended generator on its own wheel; between two
+    poll epochs the groups advance independently (in-process, one after
+    another, each under its own saved clock), and at every epoch the
+    coordinator runs the *interleaved* poll-tick body once over all
+    streams in stream order. Controllers and the arbiter therefore
+    observe exactly the merged fleet state they would under one wheel:
+    the barrier keeps any group from running past a tick whose decisions
+    (migrations, re-planning, arbitration) could touch it.
+
+    Bit-exactness: the interleaved run processes every event with time
+    strictly below a tick before the tick fires (the poll lane beats all
+    event lanes at equal time, and groups share no state, so cross-group
+    event order below a barrier is immaterial); the tick itself fires
+    while any group still has work, exactly the interleaved poll
+    rechain's condition; and the clock each group observes is its own
+    event time, restored across yields."""
+    global LAST_SHARD_LOG, LAST_SHARD_PIPE_BYTES
+    clock = cluster.clock
+    t0 = clock.now_ms
+    logs: List[list] = [[] for _ in groups]
+    coord_log: List[tuple] = []
+    results: List[Optional[tuple]] = [None] * len(groups)
+    ends = [t0] * len(groups)
+    gens = []
+    for group, log in zip(groups, logs):
+        gens.append(_group_events(cluster, group, cfg, None, arbiter=None,
+                                  multi=multi, shard_log=log, epoch=True))
+    live = []
+    for i, gen in enumerate(gens):
+        clock.now_ms = t0
+        try:
+            next(gen)                  # prime: runs to the first barrier
+            live.append(i)
+        except StopIteration as stop:
+            results[i] = stop.value
+            ends[i] = clock.now_ms
+    nev_ticks = 0
+    tick = t0
+    while live:
+        clock.now_ms = tick
+        coord_log.append((tick, "poll", len(streams)))
+        _poll_tick(streams, tick, multi, arbiter, closure=True)
+        nev_ticks += 1
+        nxt = tick + POLL_INTERVAL_MS
+        for i in list(live):
+            try:
+                gens[i].send(nxt)
+            except StopIteration as stop:
+                results[i] = stop.value
+                ends[i] = clock.now_ms
+                live.remove(i)
+        tick = nxt
+    t_end = max(ends)
+    clock.now_ms = t_end
+    nev_total = nev_ticks + sum(r[2] for r in results)
+    nev_total += _reconcile_tails(cluster, [r[3] for r in results], t_end)
+    LAST_SHARD_LOG = merge_shard_logs(logs + [coord_log])
+    LAST_SHARD_PIPE_BYTES = 0
     return [], None, nev_total
 
 
@@ -902,19 +1223,27 @@ def run_fast_streams(cluster, streams: Sequence, cfg,
                      scenario, arbiter=None) -> tuple:
     """Drop-in fast-core replacement for the oracle loop
     (``engine._run_event_streams``): same signature, same return shape,
-    bit-for-bit identical per-stream results. Dispatches to one
-    interleaved wheel run, or to placement-disjoint shard groups when
-    ``cfg.shards == "auto"`` permits."""
-    global LAST_EVENT_COUNT, LAST_SHARD_LOG
+    bit-for-bit identical per-stream results. Dispatches to reachable-
+    disjoint shard groups when ``cfg.shards == "auto"`` (the default)
+    permits — free-running groups when no control loop spans them, the
+    epoch barrier when one does — else to one interleaved wheel run."""
+    global LAST_EVENT_COUNT, LAST_SHARD_LOG, LAST_SHARD_PIPE_BYTES
     streams = list(streams)
-    groups = _shardable(streams, cfg, scenario, arbiter)
-    if groups is not None:
-        leftover, fabric, nev = _run_sharded(cluster, streams, cfg, groups,
-                                             multi=len(streams) > 1)
+    sharded = _shardable(streams, cfg, scenario, arbiter)
+    multi = len(streams) > 1
+    if sharded is not None:
+        groups, shard_mode = sharded
+        if shard_mode == "epoch":
+            leftover, fabric, nev = _run_epoch(cluster, streams, cfg,
+                                               groups, multi, arbiter)
+        else:
+            leftover, fabric, nev = _run_sharded(cluster, streams, cfg,
+                                                 groups, multi)
     else:
         LAST_SHARD_LOG = []
-        leftover, fabric, nev = _run_group(cluster, streams, cfg, scenario,
-                                           arbiter=arbiter,
-                                           multi=len(streams) > 1)
+        LAST_SHARD_PIPE_BYTES = 0
+        leftover, fabric, nev, _ = _run_group(cluster, streams, cfg,
+                                              scenario, arbiter=arbiter,
+                                              multi=multi)
     LAST_EVENT_COUNT = nev
     return leftover, fabric

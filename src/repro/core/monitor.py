@@ -162,6 +162,42 @@ class ResourceMonitor:
         self.poll()
         return [s for s in self.snapshots.values() if s.online]
 
+    def poll_closure(self, allowed) -> List[NodeStats]:
+        """Closure-local poll tick for the fast event core's epoch-barrier
+        coordinator: builds ``NodeStats`` snapshots and history only for
+        the ``allowed`` node closure of a stream's declared ``nodes=``
+        subset — the only stats its adaptation controller and planner can
+        ever read (``AdaptationController._closure_stats`` filters every
+        consumer through the same set, and the scheduler/decision counters
+        the rest of a fleet-wide poll would feed are not part of the
+        engine's parity surface). Fleet-wide side effects stay bit-exact
+        with :meth:`poll`: the per-node overhead charge in node order
+        (``monitor_overhead_pct`` is compared bit-for-bit against the heap
+        oracle), the ``cpu_busy_ms`` window resets, and offline detection.
+        Caller owns the interval gate. Returns the closure's online stats
+        (the shape ``TaskScheduler.select_node`` takes)."""
+        now = self.cluster.clock.now_ms
+        window = max(now - self.last_poll_ms, POLL_INTERVAL_MS)
+        self.last_poll_ms = now
+        self.polls += 1
+        snaps: Dict[str, NodeStats] = {}
+        seen = self._offline_seen
+        for node in self.cluster.nodes.values():
+            self.overhead_ms += MONITOR_COST_MS_PER_POLL
+            if node.node_id in allowed:
+                stat = self._stat(node, window)   # resets cpu_busy_ms
+                snaps[node.node_id] = stat
+                h = self.history.setdefault(node.node_id, [])
+                h.append(stat)
+                if len(h) > HISTORY_WINDOW:
+                    h.pop(0)
+            else:
+                node.cpu_busy_ms = 0.0
+            if not node.online and node.node_id not in seen:
+                seen.add(node.node_id)
+        self.snapshots = snaps
+        return [s for s in snaps.values() if s.online]
+
     def sustained_overload(self, node_id: str, polls: int,
                            threshold: float) -> bool:
         """True when the node's last ``polls`` snapshots all exceeded the load

@@ -445,9 +445,22 @@ class DistributedInference:
                  tenant: Optional[Tenant] = None,
                  committed_ms: Optional[Dict[str, float]] = None,
                  expected_k: int = 1,
-                 batch_model: Optional[BatchCostModel] = None):
+                 batch_model: Optional[BatchCostModel] = None,
+                 nodes: Optional[Sequence[str]] = None):
         self.cluster = cluster
         self.partitioner = partitioner
+        # optional placement closure: when set, planning, deployment, and
+        # (through the AdaptationController) every future migration are
+        # restricted to this node subset. This is what makes an adaptive
+        # tenant shardable — the fast core can prove two tenants can never
+        # touch the same node only if their closures are disjoint.
+        if nodes is not None:
+            known = set(cluster.nodes)
+            unknown = set(nodes) - known
+            assert not unknown, f"nodes= not in cluster: {sorted(unknown)}"
+            self.allowed_nodes: Optional[frozenset] = frozenset(nodes)
+        else:
+            self.allowed_nodes = None
         # plan/placement ownership lives on the tenant (core.tenancy): a
         # solo pipeline gets an anonymous tenant, a registry-managed one
         # is handed the registry's Tenant object
@@ -487,7 +500,8 @@ class DistributedInference:
                 "method='planner' chooses the assignment; don't pass one"
             res = PartitionPlanner(partitioner.graph, self.planner_cfg,
                                    batch_model=self.batch_model).plan(
-                node_views_from_cluster(cluster, self.scheduler),
+                self._filter_views(
+                    node_views_from_cluster(cluster, self.scheduler)),
                 batch=batch, calibration=partitioner.calibration,
                 speedup=self.deployer.speedup,
                 committed_ms=self.committed_ms,
@@ -501,6 +515,15 @@ class DistributedInference:
             n = num_partitions or len(cluster.online_nodes())
             self.plan = partitioner.plan(n, weights=weights,
                                          refine=refine, method=method)
+        if self.allowed_nodes is not None and assignment is not None:
+            outside = set(assignment) - self.allowed_nodes
+            assert not outside, \
+                f"assignment leaves the nodes= closure: {sorted(outside)}"
+        elif self.allowed_nodes is not None:
+            # the NSA auto-placement path selects fleet-wide; a closure
+            # only holds when the planner (or the caller) picks the nodes
+            assert method == "planner", \
+                "nodes= needs method='planner' or an explicit assignment"
         self.placement = self.deployer.deploy_plan(self.plan, assignment)
         if adaptation is None and adaptive:
             adaptation = AdaptationConfig(planner=self.planner_cfg)
@@ -508,6 +531,16 @@ class DistributedInference:
             AdaptationController(self, adaptation) if adaptation is not None
             else None)
         self._verified = executor is None
+
+    def _filter_views(self, views):
+        """Restrict planner node views to the ``nodes=`` closure (identity
+        when no closure was declared)."""
+        if self.allowed_nodes is None:
+            return views
+        allowed = self.allowed_nodes
+        kept = [v for v in views if v.node_id in allowed]
+        assert kept, "nodes= closure has no plannable node"
+        return kept
 
     # --- tenancy: plan ownership delegates to the Tenant ----------------------
 

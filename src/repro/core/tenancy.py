@@ -176,14 +176,17 @@ def committed_budgets(tenants, exclude=None) -> Dict[str, float]:
     return out
 
 
-def disjoint_placement_groups(placements) -> List[List[int]]:
-    """Partition placement maps (stage -> node id) into groups that share
-    no node — union-find over shared placement nodes. Returns index
-    groups, each sorted, ordered by smallest member. Two tenants in
+def disjoint_node_groups(node_sets) -> List[List[int]]:
+    """Partition node-id sets into groups that share no node — union-find
+    over shared nodes. Returns index groups, each sorted, ordered by
+    smallest member. The fast event core feeds this either bare placement
+    node sets (immobile tenants) or *reachable* sets (placement plus the
+    ``nodes=`` migration closure of an adaptive tenant): two tenants in
     different groups can never contend for an engine, queue slot, or
-    (isolated-fabric) link, which is what lets the fast event core
-    (``core.fastcore``) run each group on an independent event wheel."""
-    parent = list(range(len(placements)))
+    (isolated-fabric) link — not even after migrations — which is what
+    lets ``core.fastcore`` run each group on an independent event wheel."""
+    node_sets = list(node_sets)
+    parent = list(range(len(node_sets)))
 
     def find(i: int) -> int:
         while parent[i] != i:
@@ -192,17 +195,23 @@ def disjoint_placement_groups(placements) -> List[List[int]]:
         return i
 
     node_owner: Dict[str, int] = {}
-    for i, placement in enumerate(placements):
-        for nid in set(placement.values()):
+    for i, nodes in enumerate(node_sets):
+        for nid in nodes:
             j = node_owner.get(nid)
             if j is None:
                 node_owner[nid] = i
             else:
                 parent[find(i)] = find(j)
     groups: Dict[int, List[int]] = {}
-    for i in range(len(placements)):
+    for i in range(len(node_sets)):
         groups.setdefault(find(i), []).append(i)
     return [groups[k] for k in sorted(groups)]
+
+
+def disjoint_placement_groups(placements) -> List[List[int]]:
+    """Placement-map (stage -> node id) form of
+    :func:`disjoint_node_groups`."""
+    return disjoint_node_groups([set(p.values()) for p in placements])
 
 
 class TenantRegistry:

@@ -146,11 +146,16 @@ class TimeWheel:
         ptr += 1
         if ptr == len(slot[2]):
             del self._slots[self._min_slot]   # lazy-deleted from the heap
+            self._min_key = None
         else:
             slot[0] = ptr
+            # the cursor slot is the minimal live slot and is kept sorted,
+            # so its next entry is the global minimum: keep the peek cache
+            # warm instead of re-deriving it through _advance(). push()
+            # already invalidates on any insert at or before this slot.
+            self._min_key = slot[2][ptr][:3]
         self._n -= 1
         self.lane_counts[item[1]] -= 1
-        self._min_key = None
         return item
 
     def __iter__(self):

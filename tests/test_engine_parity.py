@@ -5,7 +5,10 @@ no hypothesis dependency) generates ~200 engine configurations spanning
 {serial, legacy, overlap} transfer × {fixed, adaptive} micro-batching ×
 {isolated, shared/fair, maxmin} fabric × {closed, deterministic, Poisson,
 MMPP-bursty, trace} arrivals × 1–3 tenants × optional result cache ×
-optional adaptation controllers/arbitration × optional scenario events.
+optional adaptation controllers/arbitration × optional scenario events ×
+optional disjoint ``nodes=`` closures (which make adaptive/arbitrated
+draws shard-eligible) × optional contended traffic (saturating rates and
+deep admission windows, driving the contended-chain fusion path).
 Every configuration runs through BOTH cores
 (``EngineConfig(core="heap")`` — the original heap loop, kept as the
 oracle — and ``core="fast"``, the time-wheel core) and must match
@@ -21,6 +24,7 @@ without paying for the full sweep (``scripts/run_checks.sh --fast``
 deselects the bulk)."""
 
 import random
+from typing import Optional
 
 import numpy as np
 import pytest
@@ -79,6 +83,19 @@ def _sample_config(rnd: random.Random) -> dict:
         scenario_at=round(rnd.uniform(500.0, 4000.0), 1),
         stream_seed=rnd.randrange(1 << 16),
     )
+    # disjoint per-tenant node closures: the draw that makes multi-tenant
+    # (and adaptive/arbitrated) configs shard-eligible under the default
+    # shards="auto" — larger fleets so the planner has ≥3 nodes per slice
+    cfg["node_slices"] = n_tenants > 1 and rnd.random() < 0.4
+    if cfg["node_slices"]:
+        cfg["n_nodes"] = rnd.choice((9, 12))
+    # contended traffic: saturating arrival rates and a deep admission
+    # window queue back-to-back same-node micro-batches, exercising the
+    # fast core's contended-chain fusion (deferred CDONE dispatch)
+    cfg["contended"] = rnd.random() < 0.25
+    if cfg["contended"]:
+        cfg["arrival_rate"] = round(cfg["arrival_rate"] * 5.0, 2)
+        cfg["concurrency"] = 16
     return cfg
 
 
@@ -126,13 +143,23 @@ def _scenario(cfg: dict, cluster):
     return [node_death(at, nid), node_recovery(at + 1500.0, nid)]
 
 
-def _run(core: str, cfg: dict):
+def _run(core: str, cfg: dict, shards: Optional[str] = None):
     """Build a fresh cluster + registry from the config and run it on
     ``core``; returns (reports dict, event count) or a stringified
-    failure (both cores must then fail identically)."""
+    failure (both cores must then fail identically). ``shards`` pins the
+    engine's shard policy (None keeps the ``EngineConfig`` default) —
+    the oracle-free sharded-vs-interleaved property runs the fast core
+    under both settings."""
     cluster = make_synthetic_cluster(cfg["n_nodes"],
                                      seed=cfg["cluster_seed"] % 1000)
     reg = TenantRegistry(cluster)
+    slices = None
+    if cfg.get("node_slices"):
+        nids = list(cluster.nodes)
+        per = len(nids) // cfg["n_tenants"]
+        slices = [nids[i * per:(i + 1) * per]
+                  for i in range(cfg["n_tenants"])]
+        slices[-1].extend(nids[cfg["n_tenants"] * per:])
     # a config hitting the seed fast path (closed/legacy/mb1/isolated)
     # runs no event loop at all; both sentinels then stay None and the
     # event-count comparison is trivially equal instead of stale
@@ -149,11 +176,13 @@ def _run(core: str, cfg: dict):
                         arrivals=_make_arrivals(cfg, i)),
                     num_partitions=3, method="planner",
                     use_cache=cfg["use_cache"],
-                    adaptive=cfg["adaptive"])
+                    adaptive=cfg["adaptive"],
+                    nodes=slices[i] if slices is not None else None)
         engine_cfg = EngineConfig(
             transfer=cfg["transfer"], micro_batch=cfg["micro_batch"],
             fabric=cfg["fabric"], adaptive_batch=cfg["adaptive_batch"],
-            core=core)
+            core=core,
+            **({} if shards is None else {"shards": shards}))
         result = reg.run(scenario=_scenario(cfg, cluster),
                          engine=engine_cfg,
                          arbitration=cfg["arbitration"])
@@ -164,20 +193,9 @@ def _run(core: str, cfg: dict):
     return result, nev
 
 
-def _assert_parity(index: int):
-    cfg = _config_at(SAMPLER_SEED, index)
-    repro = (f"config {index} of sampler seed {SAMPLER_SEED} — replay "
-             f"with tests.test_engine_parity._config_at({SAMPLER_SEED}, "
-             f"{index}) = {cfg!r}")
-    heap_res, heap_ev = _run("heap", cfg)
-    fast_res, fast_ev = _run("fast", cfg)
-    if isinstance(heap_res, str) or isinstance(fast_res, str):
-        assert heap_res == fast_res, (
-            f"cores disagree on failure — heap: {heap_res!r}, fast: "
-            f"{fast_res!r}\n{repro}")
-        return
-    assert heap_ev == fast_ev, (
-        f"event counts differ: heap {heap_ev}, fast {fast_ev}\n{repro}")
+def _assert_results_equal(heap_res, fast_res, repro: str):
+    """Bit-for-bit report equality — shared by the heap-vs-fast parity
+    asserts and the sharded-vs-interleaved property."""
     assert set(heap_res.reports) == set(fast_res.reports), repro
     for name, h in heap_res.reports.items():
         f = fast_res.reports[name]
@@ -202,8 +220,24 @@ def _assert_parity(index: int):
         # headline ones explicitly so a failure names the metric
         assert float(np.percentile(h.columns.sojourn_ms, 99)) == \
                float(np.percentile(f.columns.sojourn_ms, 99)), repro
-    harb = heap_res.arbitration
-    assert harb == fast_res.arbitration, repro
+    assert heap_res.arbitration == fast_res.arbitration, repro
+
+
+def _assert_parity(index: int):
+    cfg = _config_at(SAMPLER_SEED, index)
+    repro = (f"config {index} of sampler seed {SAMPLER_SEED} — replay "
+             f"with tests.test_engine_parity._config_at({SAMPLER_SEED}, "
+             f"{index}) = {cfg!r}")
+    heap_res, heap_ev = _run("heap", cfg)
+    fast_res, fast_ev = _run("fast", cfg)
+    if isinstance(heap_res, str) or isinstance(fast_res, str):
+        assert heap_res == fast_res, (
+            f"cores disagree on failure — heap: {heap_res!r}, fast: "
+            f"{fast_res!r}\n{repro}")
+        return
+    assert heap_ev == fast_ev, (
+        f"event counts differ: heap {heap_ev}, fast {fast_ev}\n{repro}")
+    _assert_results_equal(heap_res, fast_res, repro)
 
 
 @pytest.mark.parametrize("index", range(TIER1_CONFIGS))
@@ -229,3 +263,47 @@ def test_sampler_is_deterministic():
     assert _config_at(SAMPLER_SEED, 17) != _config_at(SAMPLER_SEED, 18)
     seq = [_sample_config(random.Random(SAMPLER_SEED)) for _ in range(1)]
     assert seq[0] == _config_at(SAMPLER_SEED, 0)
+
+
+def _sharded_config(adaptive: bool, arbitration: bool,
+                    contended: bool) -> dict:
+    """A fixed multi-tenant config with disjoint per-tenant node slices:
+    shard-eligible by construction (free mode when controller-less,
+    epoch mode when adaptive/arbitrated)."""
+    return dict(transfer="overlap", micro_batch=4, adaptive_batch=True,
+                fabric="isolated", arrivals_kind="poisson",
+                arrival_rate=40.0 if contended else 8.0, arrival_seed=11,
+                n_tenants=3, n_nodes=12, cluster_seed=77, n_requests=60,
+                concurrency=16 if contended else 8, repeat_rate=0.0,
+                use_cache=False, adaptive=adaptive,
+                arbitration=arbitration, scenario_kind="none",
+                scenario_at=0.0, stream_seed=5, node_slices=True,
+                contended=contended)
+
+
+@pytest.mark.parametrize("adaptive,arbitration,contended", [
+    (False, False, False),    # free-running shard groups
+    (False, False, True),     # free-running, contended-fusion heavy
+    (True, False, False),     # epoch barrier: per-tenant controllers
+    (True, True, False),      # epoch barrier: capacity arbiter on top
+])
+def test_sharded_matches_interleaved(adaptive, arbitration, contended):
+    """Oracle-free sharding property: the same config run by the fast
+    core with ``shards="auto"`` and ``shards="none"`` emits the *exact*
+    same event count and reports — queue-depth series, monitor overhead,
+    adaptation logs and arbitration summaries included. This is the
+    merged-sampling-series and epoch-barrier guarantee, asserted without
+    paying for a heap-oracle run."""
+    cfg = _sharded_config(adaptive, arbitration, contended)
+    auto_res, auto_ev = _run("fast", cfg, shards="auto")
+    assert fastcore.LAST_SHARD_LOG, \
+        "config was expected to shard under shards='auto'"
+    none_res, none_ev = _run("fast", cfg, shards="none")
+    assert not fastcore.LAST_SHARD_LOG
+    assert not isinstance(auto_res, str), auto_res
+    assert not isinstance(none_res, str), none_res
+    repro = (f"sharded vs interleaved fast core, adaptive={adaptive} "
+             f"arbitration={arbitration} contended={contended}")
+    assert auto_ev == none_ev, (
+        f"event counts differ: auto {auto_ev}, none {none_ev}\n{repro}")
+    _assert_results_equal(none_res, auto_res, repro)

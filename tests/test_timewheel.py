@@ -181,8 +181,11 @@ def test_determinism_under_global_rng_scrambling():
 
 def test_sharded_run_matches_interleaved_columns():
     """Placement-disjoint tenants on independent wheels produce the same
-    per-request columns as the interleaved run (an internal metamorphic
-    check — no heap engine involved)."""
+    results as the interleaved run (an internal metamorphic check — no
+    heap engine involved): per-request columns, and — since the sharded
+    merge tick-extends each shard's poll series to the fleet horizon —
+    the queue-depth sampling series and monitor overhead, bit-for-bit,
+    in-process and forked alike."""
     from repro.core.tenancy import TenantRegistry, TenantTraffic
 
     def run(shards, workers=0):
@@ -204,10 +207,17 @@ def test_sharded_run_matches_interleaved_columns():
     base = run("none")
     sharded = run("auto")
     forked = run("auto", workers=2)
+    from repro.core import fastcore
+    assert fastcore.LAST_SHARD_PIPE_BYTES > 0   # the forked run shipped
     for name, rep in base.reports.items():
-        assert sharded.reports[name].columns.bitwise_equal(rep.columns)
-        assert forked.reports[name].columns.bitwise_equal(rep.columns)
-        assert sharded.reports[name].batch_hist == rep.batch_hist
+        for other in (sharded, forked):
+            o = other.reports[name]
+            assert o.columns.bitwise_equal(rep.columns)
+            assert o.batch_hist == rep.batch_hist
+            assert np.array_equal(o.queue_depth[0], rep.queue_depth[0])
+            assert np.array_equal(o.queue_depth[1], rep.queue_depth[1])
+            assert o.monitor_overhead_pct == rep.monitor_overhead_pct
+            assert o.stability == rep.stability
 
 
 def test_shard_log_merge_deterministic():
